@@ -1,0 +1,66 @@
+"""Paper Table II/III: compilation time & cost, Tuna vs dynamic tuning.
+
+For the same candidate set, compare:
+  * Tuna: pure static analysis wall time (parallel, no device execution);
+  * Dynamic (AutoTVM role): measured execution of every candidate
+    (sequential — measurements can't share the device).
+
+Cost ($) = wall hours × instance price (paper Table III constants:
+C5.9xlarge $1.53/h for the measuring fleet; Tuna runs on the same host).
+Also reports the paper's headline ratio extrapolated to the full space size.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spaces import MatmulSpace
+from repro.core.tuner import _score_config, tune
+from repro.hw import get_target
+
+from benchmarks.measure import measure_config
+from benchmarks.topk_ratio import sample_space
+
+PRICE_PER_HOUR = 1.53  # EC2 C5.9xlarge (paper Table III)
+
+
+def compile_time_comparison(M=512, N=512, K=512, n_configs: int = 16,
+                            iters: int = 3, seed: int = 0) -> Dict:
+    target = get_target("cpu_avx2")
+    space = MatmulSpace(M, N, K, 4, target_kind="cpu")
+    cfgs = sample_space(space, n_configs, seed)
+
+    t0 = time.perf_counter()
+    for cfg in cfgs:
+        _score_config(space, target, cfg)
+    static_s = time.perf_counter() - t0
+
+    rng = np.random.default_rng(seed)
+    a = jnp.array(rng.standard_normal((M, K)), jnp.float32)
+    b = jnp.array(rng.standard_normal((K, N)), jnp.float32)
+    t0 = time.perf_counter()
+    for cfg in cfgs:
+        measure_config(M, N, K, cfg, a, b, iters=iters)
+    dynamic_s = time.perf_counter() - t0
+
+    # ES-driven search budget (the deployed flow) for reference
+    t0 = time.perf_counter()
+    tune(space, target, iterations=8, population=12)
+    es_s = time.perf_counter() - t0
+
+    full = space.size()
+    return {
+        "n_configs": len(cfgs),
+        "static_s": static_s,
+        "dynamic_s": dynamic_s,
+        "es_search_s": es_s,
+        "speedup": dynamic_s / max(static_s, 1e-9),
+        "static_cost_usd_full_space": static_s / len(cfgs) * full / 3600
+        * PRICE_PER_HOUR,
+        "dynamic_cost_usd_full_space": dynamic_s / len(cfgs) * full / 3600
+        * PRICE_PER_HOUR,
+        "full_space": full,
+    }

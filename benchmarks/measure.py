@@ -1,0 +1,74 @@
+"""Real-hardware measurement harness (the AutoTVM role on the host CPU).
+
+A schedule config (bm, bn, bk, order) is realised as an XLA program of
+``fori_loop`` + ``dynamic_slice`` block dots — XLA:CPU does NOT re-fuse these
+into one GEMM, so block sizes genuinely change measured cache behaviour.
+This supplies the ground-truth latencies for the paper's top-k-performance-
+ratio experiment (Fig. 3/4) and the "AutoTVM Full" role in the compile-time
+tables: Tuna never *uses* these timings to rank — it ranks statically; the
+measurements only evaluate how good the static ranking is.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def blocked_matmul(M: int, N: int, K: int, bm: int, bn: int, bk: int,
+                   order: str = "ikj"):
+    """Returns a jit-able f(A, B) -> C computing C via block dots in the
+    given loop order (ikj: k innermost reuses the C block across k? no —
+    order names the (i, k, j) nesting of block loops, innermost last)."""
+    gm, gn, gk = M // bm, N // bn, K // bk
+
+    def f(a, b):
+        c0 = jnp.zeros((M, N), a.dtype)
+
+        def body(t, c):
+            if order == "ikj":
+                i = t // (gk * gn)
+                k = (t // gn) % gk
+                j = t % gn
+            elif order == "kij":
+                k = t // (gm * gn)
+                i = (t // gn) % gm
+                j = t % gn
+            else:  # ijk
+                i = t // (gn * gk)
+                j = (t // gk) % gn
+                k = t % gk
+            ab = jax.lax.dynamic_slice(a, (i * bm, k * bk), (bm, bk))
+            bb = jax.lax.dynamic_slice(b, (k * bk, j * bn), (bk, bn))
+            cb = jax.lax.dynamic_slice(c, (i * bm, j * bn), (bm, bn))
+            cb = cb + ab @ bb
+            return jax.lax.dynamic_update_slice(c, cb, (i * bm, j * bn))
+
+        return jax.lax.fori_loop(0, gm * gn * gk, body, c0)
+
+    return f
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per call (jit-compiled, blocked until ready)."""
+    jf = jax.jit(fn)
+    out = jf(*args)
+    jax.block_until_ready(out)
+    for _ in range(warmup - 1):
+        jax.block_until_ready(jf(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jf(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def measure_config(M: int, N: int, K: int, cfg: Dict, a, b,
+                   iters: int = 5) -> float:
+    fn = blocked_matmul(M, N, K, cfg["bm"], cfg["bn"], cfg["bk"],
+                        cfg.get("order", "ikj"))
+    return time_fn(fn, a, b, iters=iters)

@@ -1,0 +1,80 @@
+"""Paper Table I: entire-network latency under three compilation regimes.
+
+The "network" is the matmul workload of one transformer block ×depth (the
+ops Tuna schedules — qkv/out projections, attention score/value GEMMs, MLP),
+at reduced dims so the dynamic oracle stays measurable on one core:
+
+  * Framework  — direct jnp.dot (XLA:CPU native, the TF/PT row's analogue)
+  * Tuna       — per-op schedule chosen by pure static analysis
+  * Oracle     — per-op schedule chosen by measuring every candidate
+                 ("AutoTVM Full"); "AutoTVM Partial" = best random candidate
+                 within Tuna's compile-time budget.
+
+Reported per-op latencies are measured; the table sums them ×depth.
+"""
+from __future__ import annotations
+
+import random
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spaces import MatmulSpace
+from repro.core.tuner import _score_config
+from repro.hw import get_target
+
+from benchmarks.measure import measure_config, time_fn
+from benchmarks.topk_ratio import sample_space
+
+
+def block_matmuls(d: int = 256, s: int = 128, ff_mult: int = 4) -> List[Tuple]:
+    """(name, M, N, K) for one decoder block at training-ish shapes."""
+    return [
+        ("qkv_proj", s, 3 * d, d),
+        ("attn_out", s, d, d),
+        ("mlp_up", s, ff_mult * d, d),
+        ("mlp_down", s, d, ff_mult * d),
+    ]
+
+
+def network_latency(d: int = 256, s: int = 128, depth: int = 4,
+                    n_configs: int = 12, iters: int = 3, seed: int = 0) -> Dict:
+    target = get_target("cpu_avx2")
+    rng = np.random.default_rng(seed)
+    rows: Dict[str, float] = {"framework": 0.0, "tuna": 0.0, "oracle": 0.0,
+                              "partial": 0.0}
+    static_budget_s = 0.0
+    for name, M, N, K in block_matmuls(d, s):
+        a = jnp.array(rng.standard_normal((M, K)), jnp.float32)
+        b = jnp.array(rng.standard_normal((K, N)), jnp.float32)
+        rows["framework"] += time_fn(lambda x, y: x @ y, a, b, iters=iters)
+
+        space = MatmulSpace(M, N, K, 4, target_kind="cpu")
+        cfgs = sample_space(space, n_configs, seed)
+
+        t0 = time.perf_counter()
+        scored = sorted(cfgs, key=lambda c: _score_config(space, target, c))
+        op_static_s = time.perf_counter() - t0
+        static_budget_s += op_static_s
+        times = {tuple(sorted(c.items())): measure_config(M, N, K, c, a, b,
+                                                          iters=iters)
+                 for c in cfgs}
+        rows["tuna"] += times[tuple(sorted(scored[0].items()))]
+        rows["oracle"] += min(times.values())
+        # partial: random candidates measured within THIS op's static budget
+        rnd = random.Random(seed)
+        budget_each = max(1, int(op_static_s / max(
+            float(np.mean(list(times.values()))) * (iters + 2), 1e-9)))
+        pick = rnd.sample(cfgs, min(budget_each, len(cfgs)))
+        rows["partial"] += min(times[tuple(sorted(c.items()))] for c in pick)
+
+    return {
+        **{k: v * depth * 1e3 for k, v in rows.items()},  # ms for the stack
+        "tuna_vs_oracle": rows["oracle"] / max(rows["tuna"], 1e-12),
+        "tuna_vs_framework": rows["framework"] / max(rows["tuna"], 1e-12),
+        "tuna_vs_partial": rows["partial"] / max(rows["tuna"], 1e-12),
+        "static_budget_s": static_budget_s,
+    }

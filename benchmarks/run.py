@@ -1,0 +1,64 @@
+"""Benchmark harness — one entry per paper table. Prints
+``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick (CI) settings
+    BENCH_FULL=1 PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main() -> None:
+    quick = os.environ.get("BENCH_FULL", "0") != "1"
+    rows = []
+
+    # Fig. 3/4 — top-k performance ratio per operator
+    from benchmarks.topk_ratio import operator_suite
+
+    for name, res in operator_suite(quick=quick):
+        rows.append((f"topk_ratio/{name}", res["best_static_ms"] * 1e3,
+                     f"ratio@10={res.get('ratio@10', res.get('ratio@5')):.3f}"
+                     f";top1={res['top1_ratio']:.3f}"))
+
+    # Table II/III — compile time & cost
+    from benchmarks.compile_time import compile_time_comparison
+
+    ct = compile_time_comparison(n_configs=8 if quick else 24,
+                                 iters=2 if quick else 5)
+    rows.append(("compile_time/static", ct["static_s"] / ct["n_configs"] * 1e6,
+                 f"speedup_vs_dynamic={ct['speedup']:.1f}x"))
+    rows.append(("compile_time/dynamic", ct["dynamic_s"] / ct["n_configs"] * 1e6,
+                 f"full_space_cost=${ct['dynamic_cost_usd_full_space']:.2f}"
+                 f"_vs_${ct['static_cost_usd_full_space']:.2f}"))
+
+    # Table I — entire-network latency
+    from benchmarks.network_e2e import network_latency
+
+    nl = network_latency(d=128 if quick else 256, s=64 if quick else 128,
+                         n_configs=8 if quick else 16,
+                         iters=2 if quick else 5)
+    rows.append(("network_e2e/tuna", nl["tuna"] * 1e3,
+                 f"vs_oracle={nl['tuna_vs_oracle']:.3f}"
+                 f";vs_framework={nl['tuna_vs_framework']:.2f}x"))
+
+    # §Roofline — from dry-run artifacts (skipped if sweep not present)
+    from benchmarks import roofline
+
+    try:
+        rl = roofline.full_table()
+    except Exception:  # noqa: BLE001
+        rl = []
+    for r in rl:
+        worst = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append((f"roofline/{r['arch']}/{r['shape']}", worst * 1e6,
+                     f"bound={r['bottleneck']};frac={r['roofline_fraction']:.2f}"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

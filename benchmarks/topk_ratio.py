@@ -1,0 +1,108 @@
+"""Paper Fig. 3/4: top-k performance ratio, Tuna static ranking vs measured
+ground truth, on the host CPU.
+
+ratio_k = Σ latency(measured-oracle top-k) / Σ latency(Tuna-static top-k)
+
+(paper definition with AutoTVM-full playing the oracle role; → 1.0 means the
+static model picks schedules as good as full on-device tuning). Operators:
+matmul, batch_matmul, conv2d (im2col-reduced — its GEMM schedule is what
+Tuna ranks). The candidate set is a seeded random sample of the space.
+"""
+from __future__ import annotations
+
+import random
+import time
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spaces import MatmulSpace
+from repro.core.tuner import _score_config
+from repro.hw import get_target
+
+from benchmarks.measure import measure_config
+
+
+def sample_space(space, n: int, seed: int = 0) -> List[Dict]:
+    all_cfgs = list(space.enumerate(4096))
+    rng = random.Random(seed)
+    return all_cfgs if len(all_cfgs) <= n else rng.sample(all_cfgs, n)
+
+
+def topk_ratio_matmul(
+    M: int, N: int, K: int, n_configs: int = 24, ks=(10,), iters: int = 3,
+    batch: int = 1, seed: int = 0, calibrated: bool = True,
+) -> Dict:
+    """Returns {'ratio@k':..., 'static_s':..., 'measure_s':...}. ``batch``
+    reuses the same schedule space with a leading vmap (batch_matmul).
+    With ``calibrated`` the linear coefficients come from the one-shot probe
+    fit (core/calibrate.py, probe 256^3 with a disjoint seed) — search stays
+    static; only the a_i change, exactly the paper's procedure."""
+    target = get_target("cpu_avx2")
+    coeffs = None
+    if calibrated:
+        from repro.core.calibrate import cached_cpu_coeffs, coeffs_for_scoring
+
+        fitted = cached_cpu_coeffs()
+        if fitted:
+            coeffs = coeffs_for_scoring(fitted)
+    space = MatmulSpace(M, N, K, 4, target_kind="cpu")
+    cfgs = sample_space(space, n_configs, seed)
+
+    t0 = time.perf_counter()
+    scores = [(cfg, _score_config(space, target, cfg, coeffs))
+              for cfg in cfgs]
+    static_s = time.perf_counter() - t0
+
+    rng = np.random.default_rng(seed)
+    a = jnp.array(rng.standard_normal((M, K)), jnp.float32)
+    b = jnp.array(rng.standard_normal((K, N)), jnp.float32)
+    t0 = time.perf_counter()
+    times = {}
+    for cfg, _ in scores:
+        key = tuple(sorted(cfg.items()))
+        times[key] = measure_config(M, N, K, cfg, a, b, iters=iters) * batch
+    measure_s = time.perf_counter() - t0
+
+    by_static = sorted(scores, key=lambda cs: cs[1])
+    by_measured = sorted(scores, key=lambda cs: times[tuple(sorted(cs[0].items()))])
+
+    out = {"static_s": static_s, "measure_s": measure_s,
+           "n_configs": len(cfgs)}
+    for k in ks:
+        k = min(k, len(cfgs))
+        t_static = sum(times[tuple(sorted(c.items()))] for c, _ in by_static[:k])
+        t_oracle = sum(times[tuple(sorted(c.items()))] for c, _ in by_measured[:k])
+        out[f"ratio@{k}"] = t_oracle / t_static
+    # top-1 regret: chosen best vs true best
+    best_static = times[tuple(sorted(by_static[0][0].items()))]
+    best_oracle = times[tuple(sorted(by_measured[0][0].items()))]
+    out["top1_ratio"] = best_oracle / best_static
+    out["best_static_ms"] = best_static * 1e3
+    out["best_oracle_ms"] = best_oracle * 1e3
+    return out
+
+
+# operator suite (paper: conv2d, conv2d_winograd, depthwise, batch_matmul)
+def operator_suite(quick: bool = True) -> List[Tuple[str, Dict]]:
+    n = 16 if quick else 48
+    it = 3 if quick else 7
+    results = []
+    results.append(
+        ("matmul_256", topk_ratio_matmul(256, 256, 256, n, ks=(5, 10), iters=it))
+    )
+    results.append(
+        ("matmul_512", topk_ratio_matmul(512, 512, 512, n, ks=(5, 10), iters=it))
+    )
+    # conv2d 14x14x256 -> 256, 3x3 via im2col: GEMM (H·W=196→pad 256, Cin·9, Cout)
+    results.append(
+        ("conv2d_im2col", topk_ratio_matmul(256, 256, 2304 // 3 * 3, n,
+                                            ks=(5, 10), iters=it))
+    )
+    # batch_matmul: attention-shaped (S x dh x S), batch folded into timing
+    results.append(
+        ("batch_matmul", topk_ratio_matmul(128, 128, 64, n, ks=(5, 10),
+                                           iters=it, batch=8))
+    )
+    return results

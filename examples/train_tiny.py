@@ -1,0 +1,65 @@
+"""End-to-end training driver example (deliverable b): train a reduced-family
+model for a few hundred steps with the full production loop — deterministic
+data, async checkpoints, failure recovery, straggler monitoring.
+
+Any assigned arch works (--arch jamba-v0.1-52b trains a tiny hybrid
+Mamba+MoE stack). Default runs ~200 steps of a yi-family model on learnable
+periodic data so the loss visibly collapses.
+
+    PYTHONPATH=src python examples/train_tiny.py --steps 200
+    PYTHONPATH=src python examples/train_tiny.py --arch jamba-v0.1-52b --steps 50
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.launch.steps import make_train_step
+from repro.launch.train import TrainOptions, train_with_recovery
+from repro.models.model import Model
+from repro.optim import adamw
+
+
+def learnable_demo(arch: str, steps: int) -> None:
+    """Loss-collapse demo on periodic data (next token fully predictable)."""
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, weight_decay=0.0)
+    params = model.init(jax.random.key(0))
+    state = adamw.init_state(opt_cfg, params)
+    base = (jnp.arange(65, dtype=jnp.int32) * 7) % cfg.vocab
+    toks = jnp.tile(base[None], (8, 1))
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    step = jax.jit(make_train_step(model, opt_cfg))
+    for i in range(steps):
+        params, state, metrics = step(params, state, batch)
+        if i % max(1, steps // 10) == 0 or i == steps - 1:
+            print(f"step {i:4d}  ce {float(metrics['ce']):.4f}  "
+                  f"grad_norm {float(metrics['grad_norm']):.2f}")
+    print(f"final ce {float(metrics['ce']):.4f} (random floor "
+          f"{jnp.log(jnp.asarray(float(cfg.vocab))):.2f})")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full-loop", action="store_true",
+                    help="use the fault-tolerant production loop instead")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_tiny")
+    args = ap.parse_args()
+
+    if args.full_loop:
+        cfg = get_config(args.arch).reduced()
+        out = train_with_recovery(cfg, TrainOptions(
+            steps=args.steps, batch=8, seq=64, ckpt_dir=args.ckpt_dir,
+            ckpt_every=50, log_every=20,
+        ))
+        print("final step", out["final_step"])
+    else:
+        learnable_demo(args.arch, args.steps)
+
+
+if __name__ == "__main__":
+    main()

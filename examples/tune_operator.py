@@ -1,0 +1,36 @@
+"""Tuna vs dynamic tuning on this machine's CPU — the paper's experiment you
+can reproduce locally: static ranking quality (Fig. 3/4) + compile-time
+speedup (Table II) on a real measurable schedule space.
+
+    PYTHONPATH=src:. python examples/tune_operator.py --size 384 --configs 16
+"""
+import argparse
+
+from benchmarks.compile_time import compile_time_comparison
+from benchmarks.topk_ratio import topk_ratio_matmul
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", type=int, default=384)
+    ap.add_argument("--configs", type=int, default=16)
+    args = ap.parse_args()
+    n = args.size
+
+    print(f"== top-k performance ratio (matmul {n}^3, "
+          f"{args.configs} candidate schedules) ==")
+    res = topk_ratio_matmul(n, n, n, n_configs=args.configs, ks=(5, 10))
+    for k, v in res.items():
+        print(f"  {k}: {v:.4f}" if isinstance(v, float) else f"  {k}: {v}")
+
+    print("== compile time: static analysis vs measure-everything ==")
+    ct = compile_time_comparison(n, n, n, n_configs=args.configs)
+    print(f"  static  {ct['static_s']:.2f}s   dynamic {ct['dynamic_s']:.2f}s "
+          f"  speedup {ct['speedup']:.0f}x")
+    print(f"  extrapolated full-space ({ct['full_space']} configs) cost: "
+          f"${ct['static_cost_usd_full_space']:.2f} vs "
+          f"${ct['dynamic_cost_usd_full_space']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

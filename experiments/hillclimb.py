@@ -1,0 +1,125 @@
+"""§Perf hillclimb driver: hypothesis → change → re-lower → record.
+
+Three pairs (picked per the §Perf rules from the baseline table):
+  * xlstm-1.3b  × train_4k    — worst roofline fraction / most collective-
+    bound (136 s of collectives: replicated-mixer grad all-reduces × accum)
+  * qwen3-moe   × train_4k    — largest-scale collective-bound cell (FSDP
+    gather + grad reduce per micro)
+  * jamba-52b   × prefill_32k — hybrid, paper-representative (distributed-
+    level Tuna tunes SP/chunk schedule), also the worst-memory cell
+
+Each variant's record lands in experiments/perf/<pair>.json; EXPERIMENTS.md
+§Perf narrates the hypothesis/result pairs from these artifacts.
+
+    PYTHONPATH=src:. python experiments/hillclimb.py [--pair xlstm_train]
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.launch.dryrun import run_cell  # noqa: E402  (sets XLA_FLAGS first)
+from benchmarks.roofline import structural_terms  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "perf")
+
+PAIRS = {
+    "xlstm_train": dict(
+        arch="xlstm_13b", shape="train_4k",
+        variants=[
+            ("baseline", {}),
+            # H1: collectives ∝ accum (per-micro grad reduce of replicated
+            # mixers); activations are tiny (d=2048) so accum can drop 16x
+            ("accum_4", {"accum_steps": 4}),
+            ("accum_1", {"accum_steps": 1}),
+            # H2: int8 grad compression cuts reduce bytes ~4x
+            ("accum_1_int8", {"accum_steps": 1, "grad_compression": "int8"}),
+            # H3: SP off — xlstm mixers are replicated over model, so seq
+            # sharding forces extra gathers? (expect small / refuted)
+            ("accum_1_nosp", {"accum_steps": 1, "sp_seq": False}),
+            # H4: the accum_1/4 memory blowup is the mLSTM chunk-scan carry
+            # saves (64 steps x [B,H,dh,dh] f32); 8x bigger chunks -> 8x
+            # fewer carries at O(R^2) intra-chunk cost that still fits
+            ("accum_4_chunk512", {"accum_steps": 4, "mlstm_chunk": 512}),
+            ("accum_2_chunk512", {"accum_steps": 2, "mlstm_chunk": 512}),
+            ("accum_4_chunk256", {"accum_steps": 4, "mlstm_chunk": 256}),
+        ],
+    ),
+    "qwen3_train": dict(
+        arch="qwen3_moe_235b_a22b", shape="train_4k",
+        variants=[
+            ("baseline", {}),
+            # H1: halving accum halves FSDP gather+reduce rounds; memory
+            # headroom (11.9 GiB temp) should absorb 2x boundaries
+            ("accum_8", {"accum_steps": 8}),
+            ("accum_4", {"accum_steps": 4}),
+            # H2: int8 grads on top of the accum winner
+            ("accum_8_int8", {"accum_steps": 8, "grad_compression": "int8"}),
+            ("accum_4_int8", {"accum_steps": 4, "grad_compression": "int8"}),
+        ],
+    ),
+    "jamba_prefill": dict(
+        arch="jamba_v01_52b", shape="prefill_32k",
+        variants=[
+            ("baseline", {}),
+            # H1: SP drives the big activation gathers; turning it off should
+            # shrink all-gather volume but grow per-device activation memory
+            ("nosp", {"sp_seq": False}),
+            # H2: larger attention KV chunks -> fewer scan steps -> fewer
+            # per-chunk collectives on the 4 attention layers
+            ("attn_2048", {"attn_chunk": 2048}),
+            # H3: larger selective-scan chunks for the 28 mamba layers
+            ("ssm_1024", {"ssm_chunk": 1024}),
+            ("attn_2048_ssm_1024", {"attn_chunk": 2048, "ssm_chunk": 1024}),
+        ],
+    ),
+}
+
+
+def run_pair(name: str) -> None:
+    spec = PAIRS[name]
+    os.makedirs(OUT, exist_ok=True)
+    results = []
+    for vname, variant in spec["variants"]:
+        print(f"=== {name} :: {vname} :: {variant}")
+        try:
+            rec = run_cell(spec["arch"], spec["shape"], variant=variant,
+                           verbose=False)
+            terms = structural_terms(spec["arch"], spec["shape"], rec)
+            peak = (rec["mem"]["temp_bytes"] + rec["mem"]["argument_bytes"])
+            row = {
+                "variant": vname, "knobs": variant,
+                "compute_s": terms["compute_s"],
+                "memory_s": terms["memory_s"],
+                "collective_s": terms["collective_s"],
+                "bottleneck": terms["bottleneck"],
+                "hbm_peak_gib": peak / 2**30,
+                "collective_gb_dev": terms["collective_bytes_dev"] / 1e9,
+                "step_lower_bound_s": max(terms["compute_s"],
+                                          terms["memory_s"],
+                                          terms["collective_s"]),
+                "roofline_fraction": terms["compute_s"] / max(
+                    terms["compute_s"], terms["memory_s"],
+                    terms["collective_s"]),
+            }
+        except Exception as e:  # noqa: BLE001
+            row = {"variant": vname, "knobs": variant,
+                   "error": f"{type(e).__name__}: {e}"[:300]}
+        print(json.dumps(row, indent=None, default=float))
+        results.append(row)
+    with open(os.path.join(OUT, f"{name}.json"), "w") as f:
+        json.dump(results, f, indent=2, default=float)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", choices=list(PAIRS), default=None)
+    args = ap.parse_args()
+    for name in ([args.pair] if args.pair else list(PAIRS)):
+        run_pair(name)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Elastic re-meshing: restore a checkpoint onto a different device count.
+
+Checkpoints are stored unsharded per leaf (store.py), so elasticity is a
+matter of recomputing the sharding pytree for the *new* mesh and device_put-
+ing. ``reshard_live`` moves an in-memory pytree between meshes (graceful
+shrink on failure without round-tripping disk).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import store
+from repro.parallel import sharding as sh
+
+
+def restore_on_mesh(directory: str, tree_like, new_mesh, kind: str = "params",
+                    params_like=None, step: Optional[int] = None):
+    """kind: 'params' | 'opt' | 'batchlike'."""
+    if kind == "params":
+        shard = sh.params_sharding(tree_like, new_mesh)
+    elif kind == "opt":
+        assert params_like is not None
+        shard = sh.opt_state_sharding(tree_like, params_like, new_mesh)
+    else:
+        shard = sh.batch_sharding(tree_like, new_mesh)
+    return store.restore(directory, tree_like, step=step, shardings=shard)
+
+
+def reshard_live(tree, new_shardings):
+    """Gather to host then re-place on the new mesh (works across device
+    counts; on a real cluster this is the post-failure shrink path)."""
+    host = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+    return jax.tree.map(lambda a, s: jax.device_put(a, s), host, new_shardings)

@@ -1,0 +1,23 @@
+"""The paper's own operator benchmark set (§V.B): the single-operator
+workloads Tuna tunes, with the shapes used by our measured CPU validation
+and the TPU static tuning demos. benchmarks/topk_ratio.py consumes these."""
+from repro.core.spaces import (
+    BatchMatmulSpace,
+    Conv2dSpace,
+    DepthwiseConv2dSpace,
+    MatmulSpace,
+)
+
+# name -> factory(target_kind) (paper: conv2d, conv2d_winograd,
+# depthwise_conv2d, batch_matrix_multiplication; winograd is represented by
+# its GEMM core — the paper skips it on CPU targets too)
+OPERATORS = {
+    "dense_256": lambda kind="cpu": MatmulSpace(256, 256, 256, 4, kind),
+    "dense_512": lambda kind="cpu": MatmulSpace(512, 512, 512, 4, kind),
+    "conv2d": lambda kind="cpu": Conv2dSpace(1, 14, 14, 256, 256, 3, 3, 4,
+                                             kind),
+    "depthwise_conv2d": lambda kind="cpu": DepthwiseConv2dSpace(
+        1, 28, 28, 128, 3, 3, 4, kind),
+    "batch_matmul": lambda kind="cpu": BatchMatmulSpace(8, 128, 128, 64, 4,
+                                                        kind),
+}

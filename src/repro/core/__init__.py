@@ -1,0 +1,31 @@
+"""Tuna core — static analysis optimization of tensor programs (the paper's
+contribution), adapted to TPU as described in DESIGN.md §2.
+
+Pipeline:  TIR (tir) ──► VISA lowering (visa) ──► Alg.1 joint counting
+(instcount) + Alg.2 locality (locality) + ILP scheduling (ilp) ──► linear
+cost model (cost_model) ──► ES search (es) over schedule spaces (spaces),
+driven by the tuner (tuner). ``hlo_features`` + ``sharding_tuner`` apply the
+same methodology to jit-lowered HLO at the distributed level.
+"""
+from repro.core.tir import Access, Compute, LinExpr, Loop, Program, TensorDecl
+from repro.core.locality import analyze_locality, LocalityReport
+from repro.core.visa import lower_program, VisaProgram
+from repro.core.instcount import count_instructions, match_loops, InstReport
+from repro.core.ilp import analyze_ilp, IlpReport
+from repro.core.cost_model import (
+    Features,
+    ScheduleMeta,
+    coefficients,
+    evaluate,
+    extract_features,
+    score,
+)
+from repro.core.es import evolve, ESResult
+from repro.core.spaces import (
+    BatchMatmulSpace,
+    Conv2dSpace,
+    DepthwiseConv2dSpace,
+    MatmulSpace,
+    Space,
+)
+from repro.core.tuner import TuneResult, rank_space, tune, tuned_matmul_blocks

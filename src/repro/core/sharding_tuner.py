@@ -1,0 +1,79 @@
+"""Distributed-level Tuna: static selection of the *distribution* schedule.
+
+The paper's Eq. 1 with a different (e, T_e): the program is a whole
+(arch × shape) training/serving step, the transformation space is the
+distribution knob grid (grad accumulation depth, sequence parallelism,
+gradient compression, optimizer-state dtype), the "low-level code" is the
+compiled HLO of the dry-run, and the cost model is the three-term roofline
+
+    c(t) = max(compute_s, memory_s, collective_s) + λ·max(0, HBM overflow)
+
+— every term derived statically from the compiled artifact (loop-scaled
+collective bytes) + datasheet constants, never from execution. The space is
+small (≤ 24 points) so the search is exhaustive; ES (core/es.py) is used for
+the larger kernel spaces.
+
+This is what §Perf's hillclimbs run under the hood; it is also exposed as
+``tune_distribution`` for end users.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, List, Optional, Tuple
+
+HBM_BYTES = 16 * 1024**3
+OVERFLOW_LAMBDA = 1e-9  # seconds per byte over HBM — dominates when violated
+
+
+@dataclasses.dataclass
+class DistResult:
+    variant: Dict[str, Any]
+    terms: Dict[str, float]
+    cost: float
+    record: Dict[str, Any]
+
+
+def default_space(kind: str, base_accum: int) -> List[Dict[str, Any]]:
+    if kind != "train":
+        return [dict(sp_seq=v) for v in (False, True)]
+    accums = sorted({max(1, base_accum // 4), max(1, base_accum // 2),
+                     base_accum, base_accum * 2})
+    grid = itertools.product(accums, (None, "int8"), (True, False))
+    return [dict(accum_steps=a, grad_compression=g, sp_seq=s)
+            for a, g, s in grid]
+
+
+def evaluate_variant(arch: str, shape: str, variant: Dict[str, Any],
+                     run_cell_fn, structural_terms_fn) -> DistResult:
+    record = run_cell_fn(arch, shape, variant=variant, verbose=False)
+    terms = structural_terms_fn(arch, shape, record)
+    peak = record["mem"]["temp_bytes"] + record["mem"]["argument_bytes"]
+    overflow = max(0.0, peak - HBM_BYTES)
+    cost = max(terms["compute_s"], terms["memory_s"],
+               terms["collective_s"]) + OVERFLOW_LAMBDA * overflow
+    return DistResult(variant=variant, terms={
+        **{k: terms[k] for k in ("compute_s", "memory_s", "collective_s")},
+        "hbm_peak_gib": peak / 2**30,
+    }, cost=cost, record=record)
+
+
+def tune_distribution(arch: str, shape: str, run_cell_fn,
+                      structural_terms_fn,
+                      space: Optional[List[Dict]] = None,
+                      kind: str = "train",
+                      base_accum: int = 16) -> Tuple[DistResult, List[DistResult]]:
+    """Exhaustive static search; returns (best, all evaluated)."""
+    space = space or default_space(kind, base_accum)
+    results = []
+    for variant in space:
+        try:
+            results.append(evaluate_variant(arch, shape, variant, run_cell_fn,
+                                            structural_terms_fn))
+        except Exception as e:  # noqa: BLE001 — a variant may not compile
+            results.append(DistResult(variant=variant, terms={},
+                                      cost=float("inf"),
+                                      record={"status": "error",
+                                              "error": str(e)[:300]}))
+    best = min(results, key=lambda r: r.cost)
+    return best, results

@@ -1,0 +1,106 @@
+"""Tuna tuner — the public entry point tying Eq. (1) together:
+
+    argmin_{t ∈ T_e}  c(f(g(e, t), a))
+
+``tune(space, target)`` runs the ES search (Alg. 4) with the static cost
+model as fitness; ``rank_space`` exhaustively scores a space (used by the
+top-k experiments and by the kernel library's block-spec picker, whose spaces
+are small). Results are memoised per (space signature, target) so model code
+can call ``tuned_matmul_blocks`` at trace time for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import cost_model, es
+from repro.core.spaces import MatmulSpace, Space
+from repro.hw import get_target
+from repro.hw.target import HardwareTarget
+
+
+@dataclasses.dataclass
+class TuneResult:
+    config: Dict
+    score: float
+    evaluations: int
+    wall_seconds: float
+    history: List[float]
+    default_score: float  # score of the space's centre config (no tuning)
+
+
+def _score_config(space: Space, target: HardwareTarget, cfg: Dict,
+                  coeffs: Optional[Dict[str, float]] = None) -> float:
+    prog, meta = space.instantiate(cfg)
+    return cost_model.evaluate(prog, target, meta, coeffs=coeffs)
+
+
+def tune(
+    space: Space,
+    target: HardwareTarget,
+    iterations: int = 12,
+    population: int = 16,
+    seed: int = 0,
+    workers: int = 8,
+) -> TuneResult:
+    t0 = time.perf_counter()
+    cache: Dict[Tuple, float] = {}
+
+    def fitness(theta: np.ndarray) -> float:
+        cfg = space.decode(theta)
+        key = tuple(sorted(cfg.items()))
+        if key not in cache:
+            cache[key] = _score_config(space, target, cfg)
+        return -cache[key]
+
+    res = es.evolve(
+        fitness,
+        dim=space.dim,
+        iterations=iterations,
+        population=population,
+        seed=seed,
+        workers=workers,
+    )
+    best_cfg = space.decode(res.best_theta)
+    best_score = _score_config(space, target, best_cfg)
+    return TuneResult(
+        config=best_cfg,
+        score=best_score,
+        evaluations=res.evaluations,
+        wall_seconds=time.perf_counter() - t0,
+        history=res.history,
+        default_score=_score_config(space, target, space.default_config()),
+    )
+
+
+def rank_space(
+    space: Space, target: HardwareTarget, limit: int = 4096,
+    coeffs: Optional[Dict[str, float]] = None,
+) -> List[Tuple[Dict, float]]:
+    """Static exhaustive ranking (ascending score = predicted fastest first)."""
+    scored = [
+        (cfg, _score_config(space, target, cfg, coeffs))
+        for cfg in space.enumerate(limit)
+    ]
+    scored.sort(key=lambda cs: cs[1])
+    return scored
+
+
+@functools.lru_cache(maxsize=256)
+def tuned_matmul_blocks(
+    M: int, N: int, K: int, dtype_bytes: int = 2, target_name: str = "tpu_v5e"
+) -> Tuple[int, int, int]:
+    """Statically tuned Pallas block sizes for a matmul — used by kernels/ops.
+
+    Exhaustive over the (small) block space: this is what a production
+    compilation service would run at model-compile time, on any host, with no
+    TPU attached (the paper's cross-compilation requirement)."""
+    target = get_target(target_name)
+    space = MatmulSpace(M, N, K, dtype_bytes, target_kind="tpu")
+    ranked = rank_space(space, target, limit=1024)
+    best = ranked[0][0]
+    return best["bm"], best["bn"], best["bk"]

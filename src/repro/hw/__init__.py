@@ -1,0 +1,18 @@
+"""Hardware target descriptions used by the Tuna static cost models.
+
+Each target is a plain dataclass of published datasheet constants — no
+measurement is required to instantiate one (the paper's cross-compilation
+constraint).
+"""
+from repro.hw.target import HardwareTarget, FunctionalUnit
+from repro.hw.tpu_v5e import TPU_V5E
+from repro.hw.cpu_avx2 import CPU_AVX2
+
+TARGETS = {t.name: t for t in (TPU_V5E, CPU_AVX2)}
+
+
+def get_target(name: str) -> HardwareTarget:
+    try:
+        return TARGETS[name]
+    except KeyError:
+        raise KeyError(f"unknown hardware target {name!r}; have {sorted(TARGETS)}")

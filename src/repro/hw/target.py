@@ -1,0 +1,68 @@
+"""Hardware target description.
+
+A ``HardwareTarget`` carries everything the Tuna cost model needs:
+
+* functional units (name, issue width) — structural hazards for the ILP
+  scheduler (paper §III-A.3: "number of different processing unit");
+* per-opcode latency/throughput tables (paper: "hardware instruction latency");
+* memory hierarchy parameters (cache/VMEM capacity for the Alg. 2 locality
+  model, bandwidths for the roofline terms);
+* SIMD geometry (vector width / MXU shape) for instruction-count estimation
+  and alignment penalties.
+
+All values are published datasheet numbers; nothing here is measured on a
+device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class FunctionalUnit:
+    name: str
+    issue_width: int = 1  # ops accepted per cycle (structural hazard limit)
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareTarget:
+    name: str
+    kind: str  # "tpu" | "cpu" | "gpu"
+
+    # --- compute geometry ---
+    # (sublanes, lanes) of a vector register / tile; MXU systolic dims for tpu
+    vreg_shape: Tuple[int, int]
+    mxu_shape: Tuple[int, int]  # (128,128) on TPU; (1, simd_width) on CPU
+    num_cores: int  # TensorCores per chip / physical cores per socket
+
+    # --- functional units & instruction tables ---
+    units: Tuple[FunctionalUnit, ...]
+    # opcode -> (unit_name, latency_cycles, inverse_throughput_cycles)
+    instruction_table: Mapping[str, Tuple[str, int, int]]
+    issue_width: int  # total instructions issued per cycle across units
+
+    # --- memory hierarchy ---
+    fast_mem_bytes: int  # L1 for CPU, VMEM for TPU (Alg. 2 cache capacity S)
+    fast_mem_line: int  # cache line / minimum DMA granule, bytes
+    hbm_bandwidth: float  # bytes / second (main memory for CPU)
+    clock_hz: float
+
+    # --- roofline constants (chip level) ---
+    peak_flops_bf16: float  # FLOP/s
+    peak_flops_f32: float
+    ici_bandwidth: float = 0.0  # bytes/s per link (TPU); 0 for CPU
+
+    # convenience -----------------------------------------------------------
+    def latency(self, opcode: str) -> int:
+        return self.instruction_table[opcode][1]
+
+    def unit_of(self, opcode: str) -> str:
+        return self.instruction_table[opcode][0]
+
+    def inv_throughput(self, opcode: str) -> int:
+        return self.instruction_table[opcode][2]
+
+    @property
+    def bytes_per_cycle_hbm(self) -> float:
+        return self.hbm_bandwidth / self.clock_hz

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots Tuna schedules.
+
+``matmul.py`` / ``flash_attention.py`` hold the ``pl.pallas_call`` kernels
+(explicit BlockSpec VMEM tiling, MXU-aligned); ``ops.py`` the jit wrappers
+that consult the static tuner for block sizes; ``ref.py`` the pure-jnp
+oracles every kernel is allclose-tested against (interpret mode on CPU).
+"""
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.matmul import matmul_pallas

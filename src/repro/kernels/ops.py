@@ -1,0 +1,107 @@
+"""Jit-friendly kernel entry points with Tuna-tuned schedules.
+
+``matmul`` / ``attention`` dispatch between the Pallas TPU kernels and the
+jnp reference paths:
+
+* on a TPU backend → Pallas with Tuna-statically-tuned block sizes;
+* on CPU (this container, and any cross-compiling host) → the jnp oracle,
+  unless ``force_pallas=True`` (interpret mode, used by tests).
+
+Tuning happens at trace time via ``core.tuner`` — pure static analysis, no
+device execution, memoised per shape (the paper's compilation-service flow).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tuner import rank_space, tuned_matmul_blocks
+from repro.core.spaces import MatmulSpace
+from repro.hw import get_target
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.matmul import matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.lru_cache(maxsize=256)
+def tuned_flash_blocks(
+    s: int, d: int, dtype_bytes: int = 2, target_name: str = "tpu_v5e"
+) -> Tuple[int, int]:
+    """Static block_q/block_k choice for flash attention: score the induced
+    (q·kᵀ then p·v) tile working set with the matmul space's cost model."""
+    target = get_target(target_name)
+    best = (None, float("inf"))
+    for bq in (128, 256, 512, 1024):
+        if s % bq or bq > s:
+            continue
+        for bk_ in (128, 256, 512, 1024):
+            if s % bk_ or bk_ > s:
+                continue
+            # tile working set: q, k, v, acc + softmax stats, double-buffered
+            vmem = (bq * d + 2 * bk_ * d + bq * d) * dtype_bytes + bq * (
+                2 * 128 + bk_
+            ) * 4
+            if 2 * vmem > target.fast_mem_bytes:
+                continue
+            # per-step MXU work: bq×bk×d + bq×d×bk
+            tiles = (bq // 128 or 1) * (bk_ // 128 or 1) * max(1, d // 128)
+            dma = (bq * d + 2 * bk_ * d) * dtype_bytes
+            t = 2 * tiles * 20 / target.clock_hz + dma / target.hbm_bandwidth
+            # prefer larger tiles (fewer grid steps / revisits) on ties
+            steps = (s // bq) * (s // bk_)
+            score = t * steps
+            if score < best[1]:
+                best = ((bq, bk_), score)
+    return best[0] or (min(512, s), min(512, s))
+
+
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    blocks: Optional[Tuple[int, int, int]] = None,
+    force_pallas: bool = False,
+) -> jax.Array:
+    """Tuna-tuned blocked matmul."""
+    m, k = x.shape
+    _, n = y.shape
+    use_pallas = _on_tpu() or force_pallas
+    if not use_pallas:
+        return ref.matmul(x, y)
+    if blocks is None:
+        blocks = tuned_matmul_blocks(m, n, k, x.dtype.itemsize)
+    bm, bn, bk = blocks
+    return matmul_pallas(
+        x, y, bm=bm, bn=bn, bk=bk, interpret=not _on_tpu()
+    )
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    blocks: Optional[Tuple[int, int]] = None,
+    force_pallas: bool = False,
+) -> jax.Array:
+    """Tuna-tuned flash attention (falls back to the oracle off-TPU)."""
+    use_pallas = _on_tpu() or force_pallas
+    if not use_pallas:
+        return ref.attention(q, k, v, causal=causal, scale=scale)
+    s, d = q.shape[-2], q.shape[-1]
+    if blocks is None:
+        blocks = tuned_flash_blocks(s, d, q.dtype.itemsize)
+    bq, bk = blocks
+    return flash_attention_pallas(
+        q, k, v, causal=causal, scale=scale, block_q=bq, block_k=bk,
+        interpret=not _on_tpu(),
+    )

@@ -1,0 +1,150 @@
+"""Shared neural-net layers (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def normal(rng, shape, scale, dtype):
+    return (scale * jax.random.normal(rng, shape, jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def init_norm(cfg, rng=None) -> Dict:
+    d = cfg.d_model
+    dt = cfg.jnp_param_dtype()
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((d,), dt), "b": jnp.zeros((d,), dt)}
+    return {"w": jnp.ones((d,), dt)}
+
+
+def apply_norm(cfg, p: Dict, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if "b" in p:  # layernorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        return (y * p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)).astype(
+            x.dtype
+        )
+    ms = (xf * xf).mean(-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+    return (y * p["w"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+
+
+def rope_tables(cfg, positions: jax.Array, d: Optional[int] = None):
+    """positions [.. S] -> (sin, cos) each [..., S, d/2] in f32."""
+    d = d or cfg.head_dim
+    half = d // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, half]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x [..., S, D]; rotate-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def init_dense_mlp(cfg, rng, d_ff: Optional[int] = None) -> Dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.jnp_param_dtype()
+    ks = jax.random.split(rng, 3)
+    sc_in, sc_out = d ** -0.5, f ** -0.5
+    p = {
+        "w1": normal(ks[0], (d, f), sc_in, dt),
+        "w2": normal(ks[1], (f, d), sc_out, dt),
+    }
+    if cfg.activation in ("swiglu", "geglu"):
+        p["w3"] = normal(ks[2], (d, f), sc_in, dt)
+    return p
+
+
+def _act(cfg, h: jax.Array, g: Optional[jax.Array]) -> jax.Array:
+    if cfg.activation == "swiglu":
+        return jax.nn.silu(h) * g
+    if cfg.activation == "geglu":
+        return jax.nn.gelu(h) * g
+    if cfg.activation == "sq_relu":
+        r = jax.nn.relu(h)
+        return r * r
+    return jax.nn.gelu(h)
+
+
+def apply_dense_mlp(cfg, p: Dict, x: jax.Array) -> jax.Array:
+    cd = cfg.jnp_compute_dtype()
+    h = x.astype(cd) @ p["w1"].astype(cd)
+    g = x.astype(cd) @ p["w3"].astype(cd) if "w3" in p else None
+    return (_act(cfg, h, g) @ p["w2"].astype(cd)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# embedding / unembedding
+# --------------------------------------------------------------------------
+
+
+def init_embed(cfg, rng) -> Dict:
+    dt = cfg.jnp_param_dtype()
+    ks = jax.random.split(rng, 2)
+    p = {"tok": normal(ks[0], (cfg.vocab, cfg.d_model), 0.02, dt)}
+    if not cfg.tie_embeddings:
+        p["head"] = normal(ks[1], (cfg.d_model, cfg.vocab), cfg.d_model ** -0.5, dt)
+    return p
+
+
+def embed(cfg, p: Dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0).astype(cfg.jnp_compute_dtype())
+
+
+def unembed(cfg, p: Dict, x: jax.Array) -> jax.Array:
+    cd = cfg.jnp_compute_dtype()
+    w = p["head"] if "head" in p else p["tok"].T
+    return x.astype(cd) @ w.astype(cd)
+
+
+def cross_entropy_loss(
+    cfg, p: Dict, x: jax.Array, labels: jax.Array, seq_chunk: int = 1024
+) -> jax.Array:
+    """Chunked softmax-xent: never materialises [B, S, V] — the sequence is
+    scanned in chunks (vocab stays shardable over the model axis)."""
+    b, s, d = x.shape
+    c = min(seq_chunk, s)
+    while s % c:
+        c //= 2
+    nchunk = s // c
+    xc = x.reshape(b, nchunk, c, d).swapaxes(0, 1)  # [nchunk, B, c, d]
+    yc = labels.reshape(b, nchunk, c).swapaxes(0, 1)
+
+    @jax.checkpoint  # recompute chunk logits in backward: no [B,c,V] residual
+    def body(tot, xy):
+        xi, yi = xy
+        logits = unembed(cfg, p, xi).astype(jnp.float32)  # [B, c, V]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yi[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, yc))
+    return total / (b * s)

@@ -1,0 +1,148 @@
+"""Mamba (S6) selective-SSM mixer.
+
+Training/prefill uses a chunked scan: ``lax.scan`` over sequence chunks with
+an associative scan inside each chunk, so the discretised [B, chunk, d_inner,
+N] tensors stay bounded (the jamba long-context path depends on this).
+Decode carries (conv_state [B, K-1, d_inner], ssm_state [B, d_inner, N]).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def d_inner(cfg) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def init_mamba(cfg, rng) -> Dict:
+    d, di, n = cfg.d_model, d_inner(cfg), cfg.ssm_state
+    k = cfg.ssm_conv
+    dt_rank = max(1, d // 16)
+    dt = cfg.jnp_param_dtype()
+    ks = jax.random.split(rng, 7)
+    p = {
+        "in_proj": L.normal(ks[0], (d, 2 * di), d ** -0.5, dt),
+        "conv_w": L.normal(ks[1], (k, di), k ** -0.5, dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "w_bc": L.normal(ks[2], (di, 2 * n), di ** -0.5, dt),
+        "w_dt": L.normal(ks[3], (di, dt_rank), di ** -0.5, dt),
+        "dt_proj": L.normal(ks[4], (dt_rank, di), dt_rank ** -0.5, dt),
+        "dt_bias": jnp.full((di,), -4.6, dt),  # softplus^-1(0.01)
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+        ).astype(dt),
+        "D": jnp.ones((di,), dt),
+        "out_proj": L.normal(ks[5], (di, d), di ** -0.5, dt),
+    }
+    return p
+
+
+def _discretise(p, x):
+    """x [..., di] -> (dA [..., di, N], dBx [..., di, N]) in f32."""
+    xf = x.astype(jnp.float32)
+    bc = xf @ p["w_bc"].astype(jnp.float32)  # [..., 2N]
+    n = bc.shape[-1] // 2
+    b_t, c_t = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(
+        (xf @ p["w_dt"].astype(jnp.float32)) @ p["dt_proj"].astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )  # [..., di]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))  # [di, N]
+    dA = jnp.exp(dt[..., None] * a)  # [..., di, N]
+    dBx = (dt * xf)[..., None] * b_t[..., None, :]  # [..., di, N]
+    return dA, dBx, c_t
+
+
+def _chunk_scan(carry_h, dA, dBx):
+    """Associative scan within a chunk. dA/dBx [B, C, di, N]; h0 [B, di, N]."""
+
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, b1 * a2 + b2
+
+    dA_s, dBx_s = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h = dA_s * carry_h[:, None] + dBx_s  # [B, C, di, N]
+    return h, h[:, -1]
+
+
+def mamba_forward(cfg, p: Dict, x: jax.Array, chunk: int = 0,
+                  return_state: bool = False):
+    """Train/prefill path. x [B, S, D] -> [B, S, D] (+ final decode cache
+    when ``return_state``)."""
+    b, s, d = x.shape
+    chunk = chunk or cfg.ssm_chunk
+    di = d_inner(cfg)
+    cd = cfg.jnp_compute_dtype()
+    k = cfg.ssm_conv
+
+    xz = x.astype(cd) @ p["in_proj"].astype(cd)  # [B, S, 2di]
+    xi, z = xz[..., :di], xz[..., di:]
+    # causal depthwise conv (width k)
+    pad = jnp.zeros((b, k - 1, di), xi.dtype)
+    xp = jnp.concatenate([pad, xi], axis=1)
+    conv = sum(
+        xp[:, i : i + s, :] * p["conv_w"].astype(cd)[i] for i in range(k)
+    ) + p["conv_b"].astype(cd)
+    u = jax.nn.silu(conv)  # [B, S, di]
+
+    c = min(chunk, s)
+    while s % c:
+        c //= 2
+    nc = s // c
+    uc = u.reshape(b, nc, c, di).swapaxes(0, 1)  # [nc, B, c, di]
+
+    @jax.checkpoint  # recompute discretised tensors in bwd
+    def body(h, u_i):
+        dA, dBx, c_t = _discretise(p, u_i)  # [B, c, di, N]
+        hs, h_last = _chunk_scan(h, dA, dBx)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, c_t)  # [B, c, di]
+        return h_last, y
+
+    h0 = jnp.zeros((b, di, cfg.ssm_state), jnp.float32)
+    h_last, ys = jax.lax.scan(body, h0, uc)
+    y = ys.swapaxes(0, 1).reshape(b, s, di)
+    y = y + u.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = y.astype(cd) * jax.nn.silu(z)
+    out = (y @ p["out_proj"].astype(cd)).astype(x.dtype)
+    if return_state:
+        conv_tail = jax.lax.dynamic_slice_in_dim(xp, s, k - 1, axis=1)
+        return out, {"conv": conv_tail, "h": h_last}
+    return out
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> Dict:
+    di = d_inner(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+        "h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_decode(cfg, p: Dict, x: jax.Array, cache: Dict) -> Tuple[jax.Array, Dict]:
+    """One token. x [B, 1, D] -> (y [B, 1, D], new cache)."""
+    b = x.shape[0]
+    di = d_inner(cfg)
+    cd = cfg.jnp_compute_dtype()
+    k = cfg.ssm_conv
+
+    xz = x[:, 0].astype(cd) @ p["in_proj"].astype(cd)
+    xi, z = xz[..., :di], xz[..., di:]
+    window = jnp.concatenate([cache["conv"], xi[:, None]], axis=1)  # [B, k, di]
+    conv = (
+        jnp.einsum("bkd,kd->bd", window.astype(cd), p["conv_w"].astype(cd))
+        + p["conv_b"].astype(cd)
+    )
+    u = jax.nn.silu(conv)  # [B, di]
+    dA, dBx, c_t = _discretise(p, u)  # [B, di, N], [B, N]
+    h = cache["h"] * dA + dBx
+    y = jnp.einsum("bdn,bn->bd", h, c_t)
+    y = y + u.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = y.astype(cd) * jax.nn.silu(z)
+    out = (y @ p["out_proj"].astype(cd)).astype(x.dtype)
+    return out[:, None], {"conv": window[:, 1:], "h": h}

@@ -1,0 +1,301 @@
+"""xLSTM mixers: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, inherently sequential scan) [arXiv:2405.04517].
+
+mLSTM uses the log-domain-stabilised chunkwise algorithm: within a chunk the
+interaction is a masked (R×R) matrix; across chunks a recurrent state
+(C [dh,dh], n [dh], m scalar) is carried — O(S·R) work, O(1) decode state
+(this is what qualifies xlstm for ``long_500k``).
+
+Simplifications vs the paper (DESIGN.md §7): sLSTM block's post-FFN is
+omitted (d_ff=0 configs carry capacity in the mLSTM up-projection); gate
+activations use the paper's stabilised exp-input/sigmoid-forget variant.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.parallel import context as pctx
+
+_EPS = 1e-6
+
+
+def _shard_map_mixer(fn, p, x, init_state, state_spec_fn):
+    """Run a replicated-weight mixer manually mapped over the DP axes only
+    (``axis_names`` subset; TP stays with the auto partitioner). Inside the
+    mapped body the recurrent scans are *local* code, so the per-timestep
+    weight-gradient all-reduces XLA inserts under SPMD (one 17 MB psum per
+    sLSTM step — EXPERIMENTS §Perf) collapse into a single psum at the
+    shard_map VJP boundary. The initial recurrent state is passed in (not
+    created inside) so the scan carry is device-varying under check_vma.
+    Falls back to plain execution when no mesh/DP context is installed or
+    the batch doesn't divide."""
+    mesh = pctx.mesh()
+    dp = pctx.dp_axes()
+    if mesh is None or dp is None:
+        return fn(p, x, init_state)
+    from jax.sharding import PartitionSpec as P
+
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    if dp_size <= 1 or x.shape[0] % dp_size:
+        return fn(p, x, init_state)
+    pspec = jax.tree.map(lambda _: P(), p)
+    xspec = P(dp, None, None)
+    sspec = state_spec_fn(P, dp)
+    return jax.shard_map(
+        fn, mesh=mesh, in_specs=(pspec, xspec, sspec),
+        out_specs=(xspec, sspec), axis_names=set(dp), check_vma=True,
+    )(p, x, init_state)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def m_dims(cfg) -> Tuple[int, int]:
+    di = 2 * cfg.d_model
+    return di, di // cfg.n_heads
+
+
+def init_mlstm(cfg, rng) -> Dict:
+    d = cfg.d_model
+    di, dh = m_dims(cfg)
+    h = cfg.n_heads
+    dt = cfg.jnp_param_dtype()
+    ks = jax.random.split(rng, 7)
+    sc = d ** -0.5
+    return {
+        "wq": L.normal(ks[0], (d, di), sc, dt),
+        "wk": L.normal(ks[1], (d, di), sc, dt),
+        "wv": L.normal(ks[2], (d, di), sc, dt),
+        "w_i": L.normal(ks[3], (d, h), sc, dt),
+        "w_f": L.normal(ks[4], (d, h), sc, dt),
+        "f_bias": jnp.full((h,), 3.0, dt),  # open forget gates at init
+        "w_o": L.normal(ks[5], (d, di), sc, dt),
+        "scale": jnp.ones((di,), dt),
+        "out_proj": L.normal(ks[6], (di, d), di ** -0.5, dt),
+    }
+
+
+def _mlstm_qkv_gates(cfg, p, x):
+    cd = cfg.jnp_compute_dtype()
+    b, s, d = x.shape
+    h = cfg.n_heads
+    di, dh = m_dims(cfg)
+    xf = x.astype(cd)
+    q = (xf @ p["wq"].astype(cd)).reshape(b, s, h, dh).swapaxes(1, 2)
+    k = (xf @ p["wk"].astype(cd)).reshape(b, s, h, dh).swapaxes(1, 2)
+    v = (xf @ p["wv"].astype(cd)).reshape(b, s, h, dh).swapaxes(1, 2)
+    li = (x.astype(jnp.float32) @ p["w_i"].astype(jnp.float32)).swapaxes(1, 2)
+    lf = jax.nn.log_sigmoid(
+        x.astype(jnp.float32) @ p["w_f"].astype(jnp.float32)
+        + p["f_bias"].astype(jnp.float32)
+    ).swapaxes(1, 2)  # [B,H,S]
+    o = jax.nn.sigmoid(xf @ p["w_o"].astype(cd))  # [B,S,di]
+    q = q.astype(jnp.float32) * (dh ** -0.5)
+    return q, k.astype(jnp.float32), v.astype(jnp.float32), li, lf, o
+
+
+def _mlstm_chunk(q, k, v, li, lf, carry):
+    """One chunk. q,k,v [B,H,R,dh]; li,lf [B,H,R]; carry (C, n, m)."""
+    C0, n0, m0 = carry
+    r = q.shape[2]
+    bcum = jnp.cumsum(lf, axis=2)  # [B,H,R] inclusive
+    # pairwise log weights w[t,s] = b_t - b_s + li_s  (s <= t)
+    logw = bcum[..., :, None] - bcum[..., None, :] + li[..., None, :]
+    mask = jnp.tril(jnp.ones((r, r), bool))
+    logw = jnp.where(mask, logw, -jnp.inf)
+    m_intra = logw.max(-1)  # [B,H,R]
+    s_inter = m0[..., None] + bcum  # [B,H,R]
+    m_t = jnp.maximum(m_intra, s_inter)
+    m_t = jnp.maximum(m_t, -1e30)  # guard all -inf rows
+
+    dmat = jnp.exp(logw - m_t[..., None])  # masked rows -> 0 via -inf
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k)
+    w_intra = scores * dmat
+    inter_scale = jnp.exp(s_inter - m_t)  # [B,H,R]
+    num = jnp.einsum("bhts,bhsd->bhtd", w_intra, v) + inter_scale[..., None] * jnp.einsum("bhtd,bhde->bhte", q, C0)
+    den = w_intra.sum(-1) + inter_scale * jnp.einsum("bhtd,bhd->bht", q, n0)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+    # carry to next chunk
+    b_r = bcum[..., -1]  # [B,H]
+    wcar = b_r[..., None] - bcum + li  # [B,H,R]
+    m_new = jnp.maximum(m0 + b_r, wcar.max(-1))
+    cscale = jnp.exp(m0 + b_r - m_new)
+    kw = jnp.exp(wcar - m_new[..., None])  # [B,H,R]
+    C1 = cscale[..., None, None] * C0 + jnp.einsum(
+        "bhs,bhsd,bhse->bhde", kw, k, v
+    )
+    n1 = cscale[..., None] * n0 + jnp.einsum("bhs,bhsd->bhd", kw, k)
+    return h, (C1, n1, m_new)
+
+
+def _mlstm_core(cfg, p: Dict, x: jax.Array, init_state: Dict):
+    b, s, d = x.shape
+    h_heads = cfg.n_heads
+    di, dh = m_dims(cfg)
+    cd = cfg.jnp_compute_dtype()
+    q, k, v, li, lf, o = _mlstm_qkv_gates(cfg, p, x)
+
+    r = min(cfg.mlstm_chunk, s)
+    while s % r:
+        r //= 2
+    nc = s // r
+
+    def split(t):  # [B,H,S,...] -> [nc, B,H,R,...]
+        return t.reshape(t.shape[0], t.shape[1], nc, r, *t.shape[3:]).transpose(
+            2, 0, 1, 3, *range(4, t.ndim + 1)
+        )
+
+    qs, ks_, vs = split(q), split(k), split(v)
+    lis, lfs = split(li), split(lf)
+
+    @jax.checkpoint  # recompute intra-chunk matrices in bwd
+    def body(carry, inp):
+        qi, ki, vi, li_i, lf_i = inp
+        h, carry = _mlstm_chunk(qi, ki, vi, li_i, lf_i, carry)
+        return carry, h
+
+    (C1, n1, m1), hs = jax.lax.scan(
+        body, (init_state["C"], init_state["n"], init_state["m"]),
+        (qs, ks_, vs, lis, lfs))
+    hseq = hs.transpose(1, 2, 0, 3, 4).reshape(b, h_heads, s, dh)
+    hseq = hseq.swapaxes(1, 2).reshape(b, s, di)
+    y = hseq.astype(cd) * p["scale"].astype(cd) * o
+    out = (y @ p["out_proj"].astype(cd)).astype(x.dtype)
+    return out, {"C": C1, "n": n1, "m": m1}
+
+
+def mlstm_forward(cfg, p: Dict, x: jax.Array, return_state: bool = False):
+    def core(p_, x_, s0_):
+        return _mlstm_core(cfg, p_, x_, s0_)
+
+    def state_specs(P, dp):
+        return {"C": P(dp, None, None, None), "n": P(dp, None, None),
+                "m": P(dp, None)}
+
+    out, state = _shard_map_mixer(core, p, x, init_mlstm_cache(cfg, x.shape[0]),
+                                  state_specs)
+    if return_state:
+        return out, state
+    return out
+
+
+def init_mlstm_cache(cfg, batch: int) -> Dict:
+    h = cfg.n_heads
+    di, dh = m_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(cfg, p: Dict, x: jax.Array, cache: Dict) -> Tuple[jax.Array, Dict]:
+    """x [B,1,D] — single-step mLSTM (recurrent form)."""
+    q, k, v, li, lf, o = _mlstm_qkv_gates(cfg, p, x)  # S dim = 1
+    h, (C1, n1, m1) = _mlstm_chunk(q, k, v, li, lf,
+                                   (cache["C"], cache["n"], cache["m"]))
+    b = x.shape[0]
+    di, _ = m_dims(cfg)
+    cd = cfg.jnp_compute_dtype()
+    hseq = h.swapaxes(1, 2).reshape(b, 1, di)
+    y = hseq.astype(cd) * p["scale"].astype(cd) * o
+    out = (y @ p["out_proj"].astype(cd)).astype(x.dtype)
+    return out, {"C": C1, "n": n1, "m": m1}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(cfg, rng) -> Dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    dt = cfg.jnp_param_dtype()
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_in": L.normal(ks[0], (d, 4 * d), d ** -0.5, dt),  # z,i,f,o preacts
+        "r": L.normal(ks[1], (h, dh, 4 * dh), dh ** -0.5, dt),  # block-diag rec.
+        "b": jnp.concatenate(
+            [jnp.zeros((2 * d,), dt), jnp.full((d,), 3.0, dt), jnp.zeros((d,), dt)]
+        ),
+        "out_proj": L.normal(ks[2], (d, d), d ** -0.5, dt),
+    }
+
+
+def _slstm_step(cfg, p, state, xw):
+    """state: (c, n, h, m) each [B, D]; xw [B, 4D] input preactivation."""
+    c, n, h, m = state
+    b, d = c.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    rec = jnp.einsum(
+        "bhd,hde->bhe", h.reshape(b, nh, dh).astype(jnp.float32),
+        p["r"].astype(jnp.float32),
+    ).reshape(b, 4 * d)
+    pre = xw.astype(jnp.float32) + rec + p["b"].astype(jnp.float32)
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(zt)
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, _EPS)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def _slstm_core(cfg, p: Dict, x: jax.Array, init_state: Dict):
+    b, s, d = x.shape
+    cd = cfg.jnp_compute_dtype()
+    xw = (x.astype(cd) @ p["w_in"].astype(cd)).swapaxes(0, 1)  # [S, B, 4D]
+
+    def body(state, xw_t):
+        return _slstm_step(cfg, p, state, xw_t)
+
+    state0 = (init_state["c"], init_state["n"], init_state["h"],
+              init_state["m"])
+    (c1, n1, h1, m1), hs = jax.lax.scan(body, state0, xw)
+    y = hs.swapaxes(0, 1).astype(cd)  # [B, S, D]
+    out = (y @ p["out_proj"].astype(cd)).astype(x.dtype)
+    return out, {"c": c1, "n": n1, "h": h1, "m": m1}
+
+
+def slstm_forward(cfg, p: Dict, x: jax.Array, return_state: bool = False):
+    def core(p_, x_, s0_):
+        return _slstm_core(cfg, p_, x_, s0_)
+
+    def state_specs(P, dp):
+        return {k: P(dp, None) for k in ("c", "n", "h", "m")}
+
+    out, state = _shard_map_mixer(core, p, x, init_slstm_cache(cfg, x.shape[0]),
+                                  state_specs)
+    if return_state:
+        return out, state
+    return out
+
+
+def init_slstm_cache(cfg, batch: int) -> Dict:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, d), -1e30, jnp.float32)}
+
+
+def slstm_decode(cfg, p: Dict, x: jax.Array, cache: Dict) -> Tuple[jax.Array, Dict]:
+    cd = cfg.jnp_compute_dtype()
+    xw = x[:, 0].astype(cd) @ p["w_in"].astype(cd)
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    (c, n, h, m), h_out = _slstm_step(cfg, p, state, xw)
+    y = (h_out.astype(cd) @ p["out_proj"].astype(cd)).astype(x.dtype)
+    return y[:, None], {"c": c, "n": n, "h": h, "m": m}

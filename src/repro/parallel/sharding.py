@@ -1,0 +1,285 @@
+"""Divisibility-aware sharding rules: DP / FSDP / TP / EP / SP.
+
+Design (DESIGN.md §5):
+  * batch dims           → DP over ('pod','data')
+  * TP feature dims      → 'model' (attention heads / d_ff / vocab / d_inner)
+  * FSDP storage dim     → 'data' (weights gathered per scanned layer group)
+  * MoE expert dim       → 'model' (EP; 128 experts / 16 = 8 per shard)
+  * KV-cache             → heads over 'model' when divisible, else the
+                           *sequence* dim over 'model' (flash-decode SP —
+                           covers GQA kv_heads < 16 and long_500k)
+
+Every rule is guarded: a dim is sharded only if its size divides the mesh
+axes product; otherwise that dim falls back to replicated (internvl's 14
+heads, whisper's 51866 vocab). Rules are written against *trailing* dims so
+the scanned stack's leading G (group) dim and any moment/quantisation
+wrappers need no special-casing.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+
+FSDP = "data"
+TP = "model"
+
+# trailing-dim specs by (parent-context, leaf-name); "DP" resolved at bind
+# time; entries may be shorter than leaf.ndim (left-padded with None).
+_PARAM_RULES: Dict[str, Tuple] = {
+    # embedding / head
+    "tok": (TP, FSDP),
+    "head": (FSDP, TP),
+    "enc_pos": (None, FSDP),
+    "vis_proj": (FSDP, TP),
+    # attention
+    "wq": (FSDP, TP),
+    "wk": (FSDP, TP),
+    "wv": (FSDP, TP),
+    "wo": (TP, FSDP),
+    "bq": (TP,),
+    "bk": (TP,),
+    "bv": (TP,),
+    # dense mlp (trailing 2 dims) — moe variants matched by ndim below
+    "w1": (FSDP, TP),
+    "w3": (FSDP, TP),
+    "w2": (TP, FSDP),
+    "router": (FSDP, None),
+    # mamba
+    "in_proj": (FSDP, TP),
+    "out_proj": (TP, FSDP),
+    "conv_w": (None, TP),
+    "conv_b": (TP,),
+    "w_bc": (TP, None),
+    "w_dt": (TP, None),
+    "dt_proj": (None, TP),
+    "dt_bias": (TP,),
+    "A_log": (TP, None),
+    "D": (TP,),
+    # mlstm / slstm
+    "w_i": (FSDP, TP),
+    "w_f": (FSDP, TP),
+    "f_bias": (TP,),
+    "w_o": (FSDP, TP),
+    "scale": (TP,),
+    "w_in": (FSDP, TP),
+    "r": (None, None, TP),
+    "b": (TP,),  # slstm bias; norm 'b' overridden by norm context
+}
+
+_MOE_3D = {"w1": (TP, FSDP, None), "w3": (TP, FSDP, None), "w2": (TP, None, FSDP)}
+
+_NORM_PARENTS = ("norm1", "norm2", "norm_x", "norm_f", "enc_norm_f", "norm")
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(f"[{k.idx}]")
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def _guard(spec: Tuple, shape: Tuple[int, ...], mesh) -> P:
+    """Left-pad to ndim and drop axes that don't divide the dim."""
+    spec = (None,) * (len(shape) - len(spec)) + tuple(spec)
+    spec = spec[-len(shape):] if shape else ()
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        size = 1
+        for a in axes:
+            if a not in mesh.axis_names:
+                size = 0
+                break
+            size *= mesh.shape[a]
+        out.append(ax if size and dim % size == 0 else None)
+    return P(*out)
+
+
+def head_aware_overrides(cfg, mesh) -> Dict[str, Tuple]:
+    """Config-aware rule overrides (Megatron-style): when head counts don't
+    divide the TP axis, a flattened (heads·dh) shard would split head_dim —
+    turning every attention score einsum into a per-chunk all-reduce (the
+    728 GB/step pathology in EXPERIMENTS §Perf). Instead:
+
+      * kv_heads % tp != 0  → replicate K/V projections (KV is small; this
+        is what Megatron does for GQA with kv < tp);
+      * heads % tp != 0     → replicate Q/O too; attention parallelism then
+        comes from sequence sharding (SP) instead of head sharding;
+      * mLSTM/sLSTM with heads % tp != 0 → replicate mixers' feature dims
+        (dh-contracting einsums otherwise psum per chunk/timestep).
+    """
+    tp = mesh.shape.get(TP, 1)
+    ov: Dict[str, Tuple] = {}
+    if cfg is None or tp == 1:
+        return ov
+    if cfg.n_kv_heads % tp != 0:
+        ov.update({"wk": (FSDP, None), "wv": (FSDP, None),
+                   "bk": (None,), "bv": (None,)})
+    if cfg.n_heads % tp != 0:
+        ov.update({"wq": (FSDP, None), "bq": (None,), "wo": (None, FSDP)})
+        if cfg.default_mixer in ("mlstm",) or cfg.slstm_every:
+            ov.update({
+                "w_i": (FSDP, None), "w_f": (FSDP, None), "f_bias": (None,),
+                "w_o": (FSDP, None), "scale": (None,),
+                "out_proj": (None, FSDP),
+                "w_in": (FSDP, None), "r": (None, None, None), "b": (None,),
+            })
+    return ov
+
+
+def param_spec(path, leaf, mesh, overrides: Optional[Dict[str, Tuple]] = None) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    parents = names[:-1]
+    if any(p in _NORM_PARENTS for p in parents[-2:]):
+        return P()
+    rule: Optional[Tuple] = None
+    # MoE expert weights are the only rank-4 w1/w2/w3 leaves ([G, E, D, F]);
+    # dense (incl. shared-expert) stacks are rank 3 ([G, D, F]).
+    if name in _MOE_3D and getattr(leaf, "ndim", 0) == 4 and "shared" not in parents:
+        rule = _MOE_3D[name]
+    if rule is None and overrides:
+        rule = overrides.get(name)
+    if rule is None:
+        rule = _PARAM_RULES.get(name)
+    if rule is None:
+        return P()
+    return _guard(rule, leaf.shape, mesh)
+
+
+def params_sharding(params_shape, mesh, cfg=None):
+    """Pytree of NamedShardings matching an (abstract) param tree."""
+    ov = head_aware_overrides(cfg, mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf, mesh, overrides=ov)
+        ),
+        params_shape,
+    )
+
+
+def opt_state_sharding(opt_shape, params_shape, mesh, cfg=None):
+    """Moments mirror params. int8-quantised moments ({'q','scale'}) are
+    shape-preserving: q takes the param's spec verbatim; the scale drops the
+    last (blocked) dim's axis; step is replicated."""
+    ov = head_aware_overrides(cfg, mesh)
+    pspec = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf, mesh, overrides=ov),
+        params_shape,
+    )
+
+    def moment_spec(ps_tree, m_tree):
+        def one(ps, m_leaf_or_dict):
+            if isinstance(m_leaf_or_dict, dict):  # int8 {'q','scale'}
+                sc_spec = P(*(tuple(ps)[:-1] + (None,))) if len(tuple(ps)) else P()
+                return {
+                    "q": NamedSharding(
+                        mesh, _guard(tuple(ps), m_leaf_or_dict["q"].shape, mesh)
+                    ),
+                    "scale": NamedSharding(
+                        mesh,
+                        _guard(tuple(sc_spec), m_leaf_or_dict["scale"].shape,
+                               mesh),
+                    ),
+                }
+            return NamedSharding(mesh, ps)
+        return jax.tree.map(one, ps_tree, m_tree,
+                            is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+    return {
+        "step": NamedSharding(mesh, P()),
+        "m": moment_spec(pspec, opt_shape["m"]),
+        "v": moment_spec(pspec, opt_shape["v"]),
+    }
+
+
+# ---------------------------------------------------------------------------
+# batch / cache
+# ---------------------------------------------------------------------------
+
+
+def batch_sharding(batch_shape, mesh):
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        return NamedSharding(mesh, _guard((dp,) + (None,) * (leaf.ndim - 1),
+                                          leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)
+
+
+_CACHE_RULES: Dict[str, Tuple] = {
+    # name -> trailing dims spec AFTER [G, B] prefix; B handled separately
+    "k": ("HEADS_OR_SEQ",),
+    "v": ("HEADS_OR_SEQ",),
+    "xk": ("HEADS_OR_SEQ",),
+    "xv": ("HEADS_OR_SEQ",),
+    "conv": (None, TP),  # [B, K-1, di]
+    "h": "H_BY_RANK",  # mamba h [B, di, N] | slstm h [B, D]
+    "C": (None, TP, None),  # [B, H, dh, dh] -> shard first dh
+    "n": "N_BY_RANK",  # mlstm [B,H,dh] | slstm [B,D]
+    "m": "M_BY_RANK",  # mlstm [B,H] | slstm [B,D]
+    "c": (TP,),  # slstm [B, D]
+}
+
+
+def cache_spec(path, leaf, mesh) -> P:
+    """Cache leaves are [G, B, ...]."""
+    names = _path_names(path)
+    name = names[-1]
+    dp = dp_axes(mesh)
+    shape = leaf.shape
+    tp_size = mesh.shape[TP]
+
+    if name in ("k", "v", "xk", "xv"):
+        # [G, B, Hkv, cap, dh]
+        g, b, hkv, cap, dh = shape
+        if hkv % tp_size == 0:
+            spec = (None, dp, TP, None, None)
+        elif cap % tp_size == 0:
+            spec = (None, dp, None, TP, None)  # sequence-sharded (SP decode)
+        else:
+            spec = (None, dp, None, None, None)
+        return _guard(spec, shape, mesh)
+    if name == "conv":
+        return _guard((None, dp, None, TP), shape, mesh)
+    if name == "h":
+        if len(shape) == 4:  # mamba [G, B, di, N]
+            return _guard((None, dp, TP, None), shape, mesh)
+        return _guard((None, dp, TP), shape, mesh)  # slstm [G, B, D]
+    if name == "C":
+        return _guard((None, dp, None, TP, None), shape, mesh)
+    if name == "n":
+        if len(shape) == 4:  # mlstm [G, B, H, dh]
+            return _guard((None, dp, None, TP), shape, mesh)
+        return _guard((None, dp, TP), shape, mesh)
+    if name == "m":
+        if len(shape) == 3:  # mlstm [G, B, H]
+            return _guard((None, dp, None), shape, mesh)
+        return _guard((None, dp, TP), shape, mesh)
+    if name == "c":
+        return _guard((None, dp, TP), shape, mesh)
+    return _guard((None, dp), shape, mesh)
+
+
+def cache_sharding(cache_shape, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, cache_spec(path, leaf, mesh)),
+        cache_shape,
+    )
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,9 @@
+import os
+
+# Tests run single-device (the dry-run pins 512 host devices itself, in a
+# subprocess). Keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

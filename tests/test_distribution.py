@@ -1,0 +1,148 @@
+"""Distribution layer: HLO collective parsing (incl. loop scaling), sharding
+rules, elastic re-shard, and an in-process mini multi-pod dry-run (8 host
+devices via subprocess — device count is locked at jax init, so these run in
+a child interpreter)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.hlo_features import (
+    loop_scaled_collectives,
+    parse_collectives,
+    parse_hlo,
+)
+
+
+class TestHloParsing:
+    HLO = textwrap.dedent("""
+        %add { ... }
+
+        %body.1 (p: (s32[], f32[128,64])) -> (s32[], f32[128,64]) {
+          %ar = f32[128,64]{1,0} all-reduce(%x), replica_groups=[2,4]<=[8], to_apply=%add
+          %ag = f32[64,64]{1,0} all-gather(%y), replica_groups=[4,2]<=[8]T(1,0)
+        }
+
+        %cond.1 (p: (s32[], f32[128,64])) -> pred[] {
+          %c = s32[] constant(12)
+          ROOT %lt = pred[] compare(%i, %c), direction=LT
+        }
+
+        ENTRY %main (a: f32[128,64]) -> f32[128,64] {
+          %w = (s32[], f32[128,64]) while(%init), condition=%cond.1, body=%body.1
+          %ar2 = f32[32,32]{1,0} all-reduce(%z), replica_groups=[8,1]<=[8], to_apply=%add
+        }
+    """)
+
+    def test_unscaled_counts_and_bytes(self):
+        st = parse_collectives(self.HLO)
+        assert st.counts["all-reduce"] == 2
+        assert st.counts["all-gather"] == 1
+        assert st.operand_bytes["all-reduce"] == 128 * 64 * 4 + 32 * 32 * 4
+        # [4,2]<=[8] = 4 groups of size 2: operand = result / 2
+        assert st.operand_bytes["all-gather"] == 64 * 64 * 4 / 2
+
+    def test_loop_scaling_multiplies_body(self):
+        st = loop_scaled_collectives(self.HLO)
+        assert st.counts["all-reduce"] == 12 + 1
+        assert st.operand_bytes["all-reduce"] == pytest.approx(
+            12 * 128 * 64 * 4 + 32 * 32 * 4)
+        assert st.operand_bytes["all-gather"] == pytest.approx(
+            12 * 64 * 64 * 4 / 2)
+
+    def test_ring_link_bytes_model(self):
+        st = parse_collectives(self.HLO)
+        # all-reduce over group of 4: 2*(s-1)/s * bytes
+        first = 2 * (4 - 1) / 4 * 128 * 64 * 4
+        second = 2 * (1 - 1) / 1 * 32 * 32 * 4
+        assert st.link_bytes["all-reduce"] == pytest.approx(first + second)
+
+    def test_done_halves_not_double_counted(self):
+        txt = ("%s = f32[16,16]{1,0} all-reduce-start(%x), replica_groups=[2,2]<=[4]\n"
+               "%d = f32[16,16]{1,0} all-reduce-done(%s)\n")
+        st = parse_collectives(txt)
+        assert st.counts["all-reduce"] == 1
+
+
+MINI_DRYRUN = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, dataclasses
+import jax
+from repro.configs.base import get_config
+from repro.launch import mesh as mesh_mod
+from repro.launch.dryrun import run_cell
+
+cfg = get_config("{arch}").reduced()
+mesh = mesh_mod.make_mesh({mesh_shape}, {axes})
+rec = run_cell("{arch}", "{shape}", mesh=mesh, cfg=cfg, verbose=False)
+print("RESULT::" + json.dumps({{k: rec[k] for k in ("status", "n_devices")}}))
+"""
+
+
+def _run_mini(arch, shape, mesh_shape, axes):
+    code = MINI_DRYRUN.format(arch=arch, shape=shape, mesh_shape=mesh_shape,
+                              axes=axes)
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/tmp", "JAX_PLATFORMS": "cpu"},
+        timeout=420,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT::")][-1]
+    return json.loads(line.split("RESULT::", 1)[1])
+
+
+@pytest.mark.slow
+class TestMiniDryRun:
+    """Reduced configs on small meshes — structure identical to production
+    (same run_cell path: shardings, accum, SP, loop-scaled parsing)."""
+
+    def test_single_pod_2x4(self):
+        rec = _run_mini("yi_6b", "train_4k", (2, 4), ("data", "model"))
+        assert rec["status"] == "ok" and rec["n_devices"] == 8
+
+    def test_multi_pod_2x2x2(self):
+        rec = _run_mini("yi_6b", "train_4k", (2, 2, 2),
+                        ("pod", "data", "model"))
+        assert rec["status"] == "ok" and rec["n_devices"] == 8
+
+    def test_moe_arch_2x4(self):
+        rec = _run_mini("qwen3_moe_235b_a22b", "train_4k", (2, 4),
+                        ("data", "model"))
+        assert rec["status"] == "ok"
+
+
+class TestShardingRules:
+    def test_divisibility_guard(self):
+        import jax
+        from repro.parallel.sharding import _guard
+
+        class FakeMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 4, "model": 2}
+
+        m = FakeMesh()
+        spec = _guard(("data", "model"), (8, 6), m)
+        assert tuple(spec) == ("data", "model")
+        spec = _guard(("data", "model"), (6, 6), m)  # 6 % 4 != 0
+        assert tuple(spec) == (None, "model")
+
+    def test_head_aware_overrides(self):
+        from repro.configs.base import get_config
+        from repro.parallel.sharding import head_aware_overrides
+
+        class FakeMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+
+        ov = head_aware_overrides(get_config("yi_6b"), FakeMesh())
+        assert "wk" in ov and "wq" not in ov  # kv=4 replicated, 32 heads ok
+        ov = head_aware_overrides(get_config("qwen25_14b"), FakeMesh())
+        assert "wq" in ov  # 40 heads don't divide 16
+        ov = head_aware_overrides(get_config("stablelm_3b"), FakeMesh())
+        assert ov == {}  # 32/32 fully shardable

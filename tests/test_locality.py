@@ -1,0 +1,84 @@
+"""Algorithm 2 faithfulness: the paper's own 2MM worked example, plus
+structural properties of the footprint/movement model."""
+import pytest
+
+from repro.core.tir import Access, Compute, LinExpr, Loop, Program, TensorDecl
+from repro.core.locality import analyze_locality
+
+
+def two_mm(Ni, Nj, Nk, Nl, Ti, Tj):
+    """Listing 1: fused+tiled 2MM. E[i,l] = (A@B)[i,j] @ D[j,l]."""
+    A = TensorDecl("A", (Ni, Nk), 4)
+    B = TensorDecl("B", (Nk, Nj), 4)
+    C = TensorDecl("C", (Ni, Nj), 4)
+    D = TensorDecl("D", (Nj, Nl), 4)
+    E = TensorDecl("E", (Ni, Nl), 4)
+    ix = LinExpr.of(("it", Ti), ("i1", 1))
+    jx = LinExpr.of(("jt", Tj), ("j1", 1))
+    ix2 = LinExpr.of(("it", Ti), ("i2", 1))
+    jx2 = LinExpr.of(("jt", Tj), ("j2", 1))
+
+    mm1 = Compute(
+        "fma",
+        output=Access("C", (ix, jx), is_store=True),
+        inputs=(Access("A", (ix, LinExpr.var("k"))),
+                Access("B", (LinExpr.var("k"), jx))),
+    )
+    mm2 = Compute(
+        "fma",
+        output=Access("E", (ix2, LinExpr.var("l")), is_store=True),
+        inputs=(Access("C", (ix2, jx2)),
+                Access("D", (jx2, LinExpr.var("l")))),
+    )
+    first = Loop("k", Nk, (Loop("i1", Ti, (Loop("j1", Tj, (mm1,)),)),))
+    second = Loop("l", Nl, (Loop("i2", Ti, (Loop("j2", Tj, (mm2,)),)),))
+    nest = Loop("it", Ni // Ti, (Loop("jt", Nj // Tj, (first, second)),))
+    return Program((A, B, C, D, E), (nest,), name="2mm")
+
+
+class TestPaper2MM:
+    """S chosen so one jt-iteration footprint fits but one it-iteration does
+    not — the paper's capacity assumption."""
+
+    Ni = Nj = Nk = Nl = 128
+    Ti = Tj = 16
+
+    def paper_numbers(self):
+        Ni, Nj, Nk, Nl, Ti, Tj = (self.Ni, self.Nj, self.Nk, self.Nl,
+                                  self.Ti, self.Tj)
+        fp_jt_iter = Ti * Tj + Ti * Nl + Tj * Nl + Tj * Nk + Ti * Nk
+        mov_jt = Ti * Nj + Ti * Nl + Nj * Nl + Nj * Nk + Ti * Nk
+        mov_it = mov_jt * (Ni // Ti)
+        return fp_jt_iter, mov_jt, mov_it
+
+    def test_movement_matches_paper_formula(self):
+        fp_jt_iter, mov_jt, mov_it = self.paper_numbers()
+        cache = 64 * 1024  # 16384 elements: > fp_jt_iter, < fp_it_iter
+        assert fp_jt_iter * 4 <= cache < mov_jt * 4
+        prog = two_mm(self.Ni, self.Nj, self.Nk, self.Nl, self.Ti, self.Tj)
+        rep = analyze_locality(prog, cache)
+        assert rep.movement_bytes == pytest.approx(mov_it * 4)
+
+    def test_everything_fits_means_movement_equals_footprint(self):
+        prog = two_mm(self.Ni, self.Nj, self.Nk, self.Nl, self.Ti, self.Tj)
+        rep = analyze_locality(prog, cache_bytes=10 * 2**20)
+        assert rep.movement_bytes == pytest.approx(rep.footprint_bytes)
+        # footprint = all five matrices
+        assert rep.footprint_bytes == pytest.approx(5 * 128 * 128 * 4)
+
+    def test_movement_monotone_in_cache(self):
+        prog = two_mm(self.Ni, self.Nj, self.Nk, self.Nl, self.Ti, self.Tj)
+        movs = [
+            analyze_locality(prog, c).movement_bytes
+            for c in (2**12, 2**14, 2**16, 2**18, 2**22)
+        ]
+        assert all(a >= b for a, b in zip(movs, movs[1:]))
+        assert movs[-1] >= analyze_locality(prog, 2**22).footprint_bytes - 1e-6
+
+    def test_larger_tiles_less_movement_under_same_cache(self):
+        cache = 64 * 1024
+        small = analyze_locality(two_mm(128, 128, 128, 128, 8, 8), cache)
+        # Ti=Tj=16 keeps the jt working set within cache; Ti=8 pays more
+        # it-loop trips -> more movement
+        big = analyze_locality(two_mm(128, 128, 128, 128, 16, 16), cache)
+        assert small.movement_bytes >= big.movement_bytes

@@ -1,0 +1,175 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tir import (
+    Access,
+    Compute,
+    LinExpr,
+    Loop,
+    Program,
+    TensorDecl,
+    distinct_values,
+)
+from repro.core.locality import analyze_locality
+from repro.optim import adamw
+
+settings.register_profile("ci", max_examples=60, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# footprint arithmetic: exact vs brute force on tiling-like decompositions
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def tiling_pairs(draw):
+    """Regular tilings: strides = running products of inner extents (the only
+    decompositions our schedule spaces emit)."""
+    depth = draw(st.integers(1, 4))
+    extents = [draw(st.integers(1, 6)) for _ in range(depth)]
+    pairs = []
+    stride = 1
+    for n in extents:
+        pairs.append((stride, n))
+        stride *= n
+    return pairs
+
+
+@given(tiling_pairs())
+def test_distinct_values_exact_for_tilings(pairs):
+    got = distinct_values(pairs)
+    vals = {0}
+    for c, n in pairs:
+        vals = {v + c * i for v in vals for i in range(n)}
+    assert got == len(vals)
+
+
+@given(st.lists(st.tuples(st.integers(1, 8), st.integers(1, 5)), min_size=1,
+                max_size=4))
+def test_distinct_values_bounds(pairs):
+    """For arbitrary strides: between max extent and product of extents, and
+    never exceeds span+1."""
+    got = distinct_values(pairs)
+    prod = 1
+    span = 0
+    for c, n in pairs:
+        prod *= n
+        span += c * (n - 1)
+    assert 1 <= got <= prod
+    assert got <= span + 1
+    # exact-enumeration sanity (small spaces only)
+    if prod <= 4096:
+        vals = {0}
+        for c, n in pairs:
+            vals = {v + c * i for v in vals for i in range(n)}
+        assert got >= max(len(vals) // 2, 1)  # approximation stays sane
+        assert got <= span + 1
+
+
+# ---------------------------------------------------------------------------
+# locality model invariants over random tiled matmuls
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def tiled_matmul(draw):
+    bm = draw(st.sampled_from([4, 8, 16]))
+    bn = draw(st.sampled_from([4, 8, 16]))
+    bk = draw(st.sampled_from([4, 8, 16]))
+    reps = draw(st.integers(1, 4))
+    M, N, K = bm * reps, bn * reps, bk * reps
+    A = TensorDecl("A", (M, K), 4)
+    B = TensorDecl("B", (K, N), 4)
+    C = TensorDecl("C", (M, N), 4)
+    stmt = Compute(
+        "fma",
+        output=Access("C", (LinExpr.of(("it", bm), ("i", 1)),
+                            LinExpr.of(("jt", bn), ("j", 1))), is_store=True),
+        inputs=(
+            Access("A", (LinExpr.of(("it", bm), ("i", 1)),
+                         LinExpr.of(("kt", bk), ("k", 1)))),
+            Access("B", (LinExpr.of(("kt", bk), ("k", 1)),
+                         LinExpr.of(("jt", bn), ("j", 1)))),
+        ),
+    )
+    nest = Loop("it", M // bm, (Loop("jt", N // bn, (Loop("kt", K // bk, (
+        Loop("i", bm, (Loop("k", bk, (Loop("j", bn, (stmt,)),)),)),)),)),))
+    return Program((A, B, C), (nest,)), (M, N, K)
+
+
+@given(tiled_matmul(), st.sampled_from([64, 512, 4096, 2**20]))
+def test_movement_at_least_footprint_compulsory(pm, cache):
+    prog, (M, N, K) = pm
+    rep = analyze_locality(prog, cache)
+    total = (M * K + K * N + M * N) * 4
+    assert rep.footprint_bytes == total  # exact for matmul
+    # compulsory misses: every element crosses the boundary at least once
+    assert rep.movement_bytes >= rep.footprint_bytes - 1e-6
+
+
+@given(tiled_matmul())
+def test_infinite_cache_movement_equals_footprint(pm):
+    prog, _ = pm
+    rep = analyze_locality(prog, 2**40)
+    assert rep.movement_bytes == rep.footprint_bytes
+
+
+@given(tiled_matmul(), st.tuples(st.sampled_from([64, 256, 1024, 8192]),
+                                 st.sampled_from([64, 256, 1024, 8192])))
+def test_movement_monotone_in_cache(pm, caches):
+    prog, _ = pm
+    c1, c2 = min(caches), max(caches)
+    assert (analyze_locality(prog, c1).movement_bytes
+            >= analyze_locality(prog, c2).movement_bytes - 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# int8 quantisation properties
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 6), st.integers(1, 4), st.floats(0.01, 100.0),
+       st.integers(0, 2**31 - 1))
+def test_int8_roundtrip_bound(rows, blocks, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((rows, blocks * 128)) * scale).astype(np.float32)
+    import jax.numpy as jnp
+
+    q = adamw.quantize_i8(jnp.asarray(x))
+    back = np.asarray(adamw.dequantize_i8(q))
+    b = x.reshape(rows, blocks, 128)
+    bound = np.abs(b).max(-1, keepdims=True) / 253.9 + 1e-7
+    assert (np.abs(back.reshape(rows, blocks, 128) - b) <= bound).all()
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_int8_idempotent(seed):
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((2, 256)), jnp.float32)
+    once = adamw.dequantize_i8(adamw.quantize_i8(x))
+    twice = adamw.dequantize_i8(adamw.quantize_i8(once))
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline: shard disjointness for arbitrary shardings
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 4).map(lambda k: 2 ** k), st.integers(0, 1000),
+       st.integers(1, 64))
+def test_synthetic_shards_partition(num_shards, step, vocab_scale):
+    from repro.data.synthetic import SyntheticConfig, SyntheticTokens
+
+    cfg = SyntheticConfig(vocab=vocab_scale * 61, seq_len=9,
+                          global_batch=num_shards * 3)
+    whole = SyntheticTokens(cfg).batch(step)["tokens"]
+    parts = [
+        SyntheticTokens(cfg, shard=i, num_shards=num_shards).batch(step)["tokens"]
+        for i in range(num_shards)
+    ]
+    np.testing.assert_array_equal(np.concatenate(parts, 0), whole)

@@ -1,0 +1,185 @@
+"""Optimizer, data pipeline, checkpointing, fault tolerance, elastic."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import store
+from repro.configs.base import get_config
+from repro.data.loader import PrefetchLoader
+from repro.data.synthetic import SyntheticConfig, SyntheticTokens
+from repro.launch.train import TrainOptions, train, train_with_recovery
+from repro.optim import adamw
+from repro.runtime.failure import FailureInjector, InjectedFailure
+from repro.runtime.straggler import StragglerMonitor
+
+RNG = np.random.default_rng(0)
+
+
+class TestAdamW:
+    def _params(self):
+        return {"w": jnp.asarray(RNG.standard_normal((4, 256)), jnp.float32),
+                "b": jnp.zeros((256,), jnp.float32)}
+
+    def test_matches_reference_math(self):
+        cfg = adamw.AdamWConfig(lr=1e-2, weight_decay=0.0, grad_clip=1e9)
+        params = self._params()
+        grads = jax.tree.map(lambda p: jnp.ones_like(p) * 0.1, params)
+        state = adamw.init_state(cfg, params)
+        new_params, state, _ = adamw.apply_updates(cfg, params, grads, state)
+        # first step: m_hat = g, v_hat = g^2 -> update = g/(|g|+eps) = 1
+        want = params["w"] - 1e-2 * 0.1 / (0.1 + cfg.eps)
+        np.testing.assert_allclose(np.asarray(new_params["w"]),
+                                   np.asarray(want), rtol=1e-5)
+
+    def test_grad_clip_global_norm(self):
+        cfg = adamw.AdamWConfig(lr=0.0, grad_clip=1.0)
+        params = self._params()
+        grads = jax.tree.map(lambda p: jnp.ones_like(p) * 100.0, params)
+        _, _, metrics = adamw.apply_updates(cfg, params, grads,
+                                            adamw.init_state(cfg, params))
+        assert float(metrics["grad_norm"]) > 1.0  # reported pre-clip
+
+    @pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+    def test_low_precision_states_still_converge(self, dtype):
+        cfg = adamw.AdamWConfig(lr=0.05, state_dtype=dtype, weight_decay=0.0)
+        w = jnp.asarray(RNG.standard_normal((8, 128)), jnp.float32)
+        target = jnp.zeros_like(w)
+        params = {"w": w}
+        state = adamw.init_state(cfg, params)
+        for _ in range(60):
+            grads = {"w": params["w"] - target}
+            params, state, _ = adamw.apply_updates(cfg, params, grads, state)
+        assert float(jnp.abs(params["w"]).mean()) < 0.2
+
+    def test_int8_roundtrip_error_bounded(self):
+        x = jnp.asarray(RNG.standard_normal((4, 512)) * 3.0, jnp.float32)
+        q = adamw.quantize_i8(x)
+        back = adamw.dequantize_i8(q)
+        # blockwise absmax scaling: error <= scale/2 = absmax/254 per block
+        blocks = np.asarray(x).reshape(4, -1, 128)
+        bound = np.abs(blocks).max(-1, keepdims=True) / 254 + 1e-6
+        err = np.abs(np.asarray(back).reshape(4, -1, 128) - blocks)
+        assert (err <= bound).all()
+
+
+class TestData:
+    def test_deterministic_and_restartable(self):
+        cfg = SyntheticConfig(vocab=1000, seq_len=32, global_batch=8)
+        a = SyntheticTokens(cfg).batch(7)
+        b = SyntheticTokens(cfg).batch(7)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_shards_disjoint_and_cover(self):
+        cfg = SyntheticConfig(vocab=50000, seq_len=16, global_batch=8)
+        whole = SyntheticTokens(cfg).batch(3)["tokens"]
+        parts = [SyntheticTokens(cfg, shard=i, num_shards=4).batch(3)["tokens"]
+                 for i in range(4)]
+        np.testing.assert_array_equal(np.concatenate(parts, 0), whole)
+
+    def test_labels_are_next_tokens(self):
+        cfg = SyntheticConfig(vocab=1000, seq_len=32, global_batch=2)
+        b = SyntheticTokens(cfg).batch(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_prefetch_loader_ordered(self):
+        cfg = SyntheticConfig(vocab=100, seq_len=8, global_batch=2)
+        src = SyntheticTokens(cfg)
+        loader = PrefetchLoader(src, start_step=5)
+        try:
+            for want in (5, 6, 7):
+                step, batch = loader.get(want)
+                assert step == want
+                np.testing.assert_array_equal(batch["tokens"],
+                                              src.batch(want)["tokens"])
+        finally:
+            loader.close()
+
+
+class TestCheckpoint:
+    def test_save_restore_bit_exact(self, tmp_path):
+        tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                "b": {"c": jnp.asarray([1, 2, 3], jnp.int32)}}
+        store.save(str(tmp_path), 5, tree)
+        like = jax.tree.map(jnp.zeros_like, tree)
+        got, manifest = store.restore(str(tmp_path), like)
+        assert manifest["step"] == 5
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_latest_pointer_and_gc(self, tmp_path):
+        tree = {"a": jnp.ones((2,), jnp.float32)}
+        for s in (1, 2, 3, 4):
+            store.save(str(tmp_path), s, tree)
+        store.gc_old(str(tmp_path), keep=2)
+        assert store.latest_step(str(tmp_path)) == 4
+        kept = [d for d in os.listdir(tmp_path) if d.startswith("step_")]
+        assert len(kept) == 2
+
+    def test_async_checkpointer(self, tmp_path):
+        ck = store.AsyncCheckpointer(str(tmp_path), keep=2)
+        ck.save(1, {"a": jnp.ones((4,), jnp.float32)})
+        ck.wait()
+        assert store.latest_step(str(tmp_path)) == 1
+
+
+class TestFaultTolerance:
+    def _opts(self, tmp_path, steps=12):
+        return TrainOptions(steps=steps, batch=2, seq=16,
+                            ckpt_dir=str(tmp_path), ckpt_every=4,
+                            log_every=100)
+
+    def test_restart_resumes_bit_exact(self, tmp_path):
+        cfg = get_config("yi_6b").reduced()
+        # uninterrupted run
+        ref = train(cfg, TrainOptions(steps=12, batch=2, seq=16,
+                                      log_every=100))
+        # interrupted at step 6 (after the step-4 checkpoint), recovered
+        inj = FailureInjector(fail_at_steps={6})
+        out = train_with_recovery(cfg, self._opts(tmp_path), injector=inj)
+        assert out["final_step"] == 12
+        for a, b in zip(jax.tree.leaves(ref["params"]),
+                        jax.tree.leaves(out["params"])):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=0, rtol=0)
+
+    def test_gives_up_after_max_restarts(self, tmp_path):
+        cfg = get_config("yi_6b").reduced()
+        inj = FailureInjector(fail_at_steps={1, 2, 3, 4, 5, 6, 7})
+        from repro.runtime.failure import RestartPolicy
+
+        inj._fired = set()
+
+        class AlwaysFail(FailureInjector):
+            def maybe_fail(self, step, phase="step"):
+                if phase == "step" and step >= 1:
+                    raise InjectedFailure(f"boom {step}")
+
+        with pytest.raises(InjectedFailure):
+            train_with_recovery(cfg, self._opts(tmp_path),
+                                injector=AlwaysFail(),
+                                policy=RestartPolicy(max_restarts=2))
+
+    def test_crash_during_save_leaves_valid_checkpoint(self, tmp_path):
+        cfg = get_config("yi_6b").reduced()
+        inj = FailureInjector(fail_during_save_at={8})
+        out = train_with_recovery(cfg, self._opts(tmp_path), injector=inj)
+        assert out["final_step"] == 12
+        assert store.latest_step(str(tmp_path)) == 12
+
+
+class TestStraggler:
+    def test_flags_slow_step_and_mitigation(self):
+        mon = StragglerMonitor(threshold=2.0, min_seconds=0.0,
+                               persistent_after=2)
+        for i in range(8):
+            assert mon.record(i, 0.10) is None
+        ev = mon.record(8, 0.50)
+        assert ev is not None and ev.mitigation == "transient"
+        ev2 = mon.record(9, 0.50, fetch_seconds=0.4)
+        assert ev2.mitigation == "rebalance_data"
+        ev3 = mon.record(10, 0.60)
+        assert ev3.mitigation == "exclude_and_remesh"

@@ -1,0 +1,72 @@
+"""Extra coverage: conv/depthwise spaces, calibration, sharding tuner glue."""
+import numpy as np
+import pytest
+
+from repro.configs.tuna_ops import OPERATORS
+from repro.core import cost_model, extract_features
+from repro.core.tuner import rank_space, tune
+from repro.hw import get_target
+
+CPU = get_target("cpu_avx2")
+TPU = get_target("tpu_v5e")
+
+
+class TestOperatorSpaces:
+    @pytest.mark.parametrize("name", sorted(OPERATORS))
+    def test_cpu_spaces_instantiate_and_score(self, name):
+        space = OPERATORS[name]("cpu")
+        cfg = space.default_config()
+        prog, meta = space.instantiate(cfg)
+        score = cost_model.evaluate(prog, CPU, meta)
+        assert np.isfinite(score) and score > 0
+
+    @pytest.mark.parametrize("name", ["dense_512", "conv2d", "batch_matmul"])
+    def test_tpu_spaces_rank(self, name):
+        space = OPERATORS[name]("tpu")
+        ranked = rank_space(space, TPU, limit=64)
+        assert len(ranked) >= 2
+        assert ranked[0][1] <= ranked[-1][1]
+
+    def test_depthwise_is_vpu_only(self):
+        """Depthwise conv has no contraction — no MXU ops on TPU."""
+        space = OPERATORS["depthwise_conv2d"]("tpu")
+        prog, meta = space.instantiate(space.default_config())
+        f = extract_features(prog, TPU, meta)
+        from repro.core import count_instructions, lower_program
+
+        rep = count_instructions(prog, lower_program(prog, TPU))
+        assert rep.counts.get("mxu.matmul", 0) == 0
+        assert f.arith_ops > 0  # vpu fma instead
+
+
+class TestCalibration:
+    def test_nnls_nonnegative_and_fits(self):
+        from repro.core.calibrate import _nnls
+
+        rng = np.random.default_rng(0)
+        A = np.abs(rng.standard_normal((40, 4)))
+        x_true = np.array([0.5, 0.0, 2.0, 0.1])
+        y = A @ x_true
+        x = _nnls(A, y, iters=5000)
+        assert (x >= 0).all()
+        np.testing.assert_allclose(A @ x, y, rtol=0.2, atol=0.1)
+
+    def test_coeffs_for_scoring_shape(self):
+        from repro.core.calibrate import coeffs_for_scoring
+
+        c = coeffs_for_scoring({
+            "ilp_cycles": 1e-9, "movement_bytes": 1e-10, "arith_ops": 0.0,
+            "ldst_ops": 0.0, "dispatch_calls": 1e-6, "intercept": 0.0,
+        })
+        assert c["vmem_overflow"] == 1.0  # hard constraint survives
+
+
+class TestDistributionSpace:
+    def test_default_space_contents(self):
+        from repro.core.sharding_tuner import default_space
+
+        space = default_space("train", base_accum=16)
+        assert {"accum_steps", "grad_compression", "sp_seq"} <= set(space[0])
+        assert len(space) >= 8
+        infer = default_space("prefill", base_accum=1)
+        assert all(set(v) == {"sp_seq"} for v in infer)
