@@ -46,9 +46,10 @@ def compile_time_comparison(M=512, N=512, K=512, n_configs: int = 16,
         measure_config(M, N, K, cfg, a, b, iters=iters)
     dynamic_s = time.perf_counter() - t0
 
-    # ES-driven search budget (the deployed flow) for reference
+    # ES-driven search budget (the deployed flow) for reference; db=False so
+    # a warm default store can't short-circuit the search being timed
     t0 = time.perf_counter()
-    tune(space, target, iterations=8, population=12)
+    tune(space, target, iterations=8, population=12, db=False)
     es_s = time.perf_counter() - t0
 
     full = space.size()

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.spaces import MatmulSpace
-from repro.core.tuner import _score_config
+from repro.core.tuner import _score_config, record_version
 from repro.hw import get_target
 
 from benchmarks.measure import measure_config
@@ -33,13 +33,24 @@ def sample_space(space, n: int, seed: int = 0) -> List[Dict]:
 def topk_ratio_matmul(
     M: int, N: int, K: int, n_configs: int = 24, ks=(10,), iters: int = 3,
     batch: int = 1, seed: int = 0, calibrated: bool = True,
+    db=None,
 ) -> Dict:
     """Returns {'ratio@k':..., 'static_s':..., 'measure_s':...}. ``batch``
     reuses the same schedule space with a leading vmap (batch_matmul).
     With ``calibrated`` the linear coefficients come from the one-shot probe
     fit (core/calibrate.py, probe 256^3 with a disjoint seed) — search stays
-    static; only the a_i change, exactly the paper's procedure."""
+    static; only the a_i change, exactly the paper's procedure.
+
+    ``db`` (ScheduleDatabase or path) shares the repro.tuna store: the best
+    static pick is written back (under a fingerprinted ``cm1-cal-<hash>``
+    version when calibrated, since fitted coefficients are host-specific),
+    and a pre-existing record is surfaced as ``warm_config`` in the
+    result."""
     target = get_target("cpu_avx2")
+    if db is not None:  # None stays off (unlike tune, no default-DB pull)
+        from repro.core.tuner import resolve_db
+
+        db = resolve_db(db)
     coeffs = None
     if calibrated:
         from repro.core.calibrate import cached_cpu_coeffs, coeffs_for_scoring
@@ -81,6 +92,26 @@ def topk_ratio_matmul(
     out["top1_ratio"] = best_oracle / best_static
     out["best_static_ms"] = best_static * 1e3
     out["best_oracle_ms"] = best_oracle * 1e3
+
+    if db is not None:
+        from repro.tuna.db import ScheduleRecord
+
+        version = record_version(coeffs)
+        if len(cfgs) < space.size():
+            # best of a random sample, not the space optimum: must never be
+            # warm-hit as if it were a search-grade record
+            version += "-sample"
+        warm = db.best(space.signature(), target.name, version=version)
+        if warm is not None:
+            out["warm_config"] = dict(warm.config)
+        db.add(ScheduleRecord(
+            op=space.signature(), target=target.name,
+            config=dict(by_static[0][0]), score=by_static[0][1],
+            evaluations=len(cfgs),
+            meta={"strategy": "topk_static", "measured_ms": best_static * 1e3,
+                  "oracle_ms": best_oracle * 1e3},
+            version=version,
+        ))
     return out
 
 

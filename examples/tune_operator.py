@@ -14,12 +14,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--size", type=int, default=384)
     ap.add_argument("--configs", type=int, default=16)
+    ap.add_argument("--db", default=None,
+                    help="repro.tuna schedule DB to read/write")
     args = ap.parse_args()
     n = args.size
 
     print(f"== top-k performance ratio (matmul {n}^3, "
           f"{args.configs} candidate schedules) ==")
-    res = topk_ratio_matmul(n, n, n, n_configs=args.configs, ks=(5, 10))
+    res = topk_ratio_matmul(n, n, n, n_configs=args.configs, ks=(5, 10),
+                            db=args.db)
     for k, v in res.items():
         print(f"  {k}: {v:.4f}" if isinstance(v, float) else f"  {k}: {v}")
 

@@ -9,7 +9,10 @@ Three pairs (picked per the §Perf rules from the baseline table):
     level Tuna tunes SP/chunk schedule), also the worst-memory cell
 
 Each variant's record lands in experiments/perf/<pair>.json; EXPERIMENTS.md
-§Perf narrates the hypothesis/result pairs from these artifacts.
+§Perf narrates the hypothesis/result pairs from these artifacts. The winning
+variant per cell is also persisted to the repro.tuna schedule DB (op
+``cell[arch=...,shape=...]``, score = roofline step lower bound) so later
+runs start from the known-best knobs instead of the baseline.
 
     PYTHONPATH=src:. python experiments/hillclimb.py [--pair xlstm_train]
 """
@@ -21,9 +24,13 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from repro.launch.dryrun import run_cell  # noqa: E402  (sets XLA_FLAGS first)
+from repro.core.tuner import resolve_db  # noqa: E402
+from repro.tuna.db import ScheduleDatabase, ScheduleRecord  # noqa: E402
 from benchmarks.roofline import structural_terms  # noqa: E402
 
 OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "perf")
+DEFAULT_DB = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "schedule_db.jsonl")
 
 PAIRS = {
     "xlstm_train": dict(
@@ -78,11 +85,23 @@ PAIRS = {
 }
 
 
-def run_pair(name: str) -> None:
+def run_pair(name: str, db: ScheduleDatabase = None) -> None:
     spec = PAIRS[name]
     os.makedirs(OUT, exist_ok=True)
+    cell_sig = f"cell[arch={spec['arch']},shape={spec['shape']}]"
+    variants = list(spec["variants"])
+    if db is not None:
+        warm = db.best(cell_sig, "tpu_v5e")
+        if warm is not None:
+            print(f"[tuna] warm best for {cell_sig}: {warm.config} "
+                  f"(bound {warm.score:.2f}s)")
+            # seed the climb from the stored winner: run it first so every
+            # later hypothesis is judged against the known best
+            knobs = dict(warm.config)
+            if all(knobs != dict(v) for _, v in variants):
+                variants.insert(0, ("warm_best", knobs))
     results = []
-    for vname, variant in spec["variants"]:
+    for vname, variant in variants:
         print(f"=== {name} :: {vname} :: {variant}")
         try:
             rec = run_cell(spec["arch"], spec["shape"], variant=variant,
@@ -112,13 +131,26 @@ def run_pair(name: str) -> None:
     with open(os.path.join(OUT, f"{name}.json"), "w") as f:
         json.dump(results, f, indent=2, default=float)
 
+    ok = [r for r in results if "error" not in r]
+    if db is not None and ok:
+        winner = min(ok, key=lambda r: r["step_lower_bound_s"])
+        db.add(ScheduleRecord(
+            op=cell_sig, target="tpu_v5e", config=dict(winner["knobs"]),
+            score=winner["step_lower_bound_s"], evaluations=len(ok),
+            meta={"strategy": "hillclimb", "model": "roofline",
+                  "variant": winner["variant"]},
+        ))
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--pair", choices=list(PAIRS), default=None)
+    ap.add_argument("--db", default=DEFAULT_DB,
+                    help="repro.tuna schedule DB path ('' to disable)")
     args = ap.parse_args()
+    db = resolve_db(args.db) if args.db else None
     for name in ([args.pair] if args.pair else list(PAIRS)):
-        run_pair(name)
+        run_pair(name, db=db)
 
 
 if __name__ == "__main__":

@@ -20,4 +20,16 @@ OPERATORS = {
         1, 28, 28, 128, 3, 3, 4, kind),
     "batch_matmul": lambda kind="cpu": BatchMatmulSpace(8, 128, 128, 64, 4,
                                                         kind),
+    # bf16 TPU matmul shapes the kernel block-spec picker asks for at trace
+    # time — tuning these warms the DB that tuned_matmul_blocks consults
+    "matmul_1024_bf16": lambda kind="tpu": MatmulSpace(1024, 1024, 1024, 2,
+                                                       kind),
+    "matmul_2048_bf16": lambda kind="tpu": MatmulSpace(2048, 2048, 2048, 2,
+                                                       kind),
+    "matmul_4096_bf16": lambda kind="tpu": MatmulSpace(4096, 4096, 4096, 2,
+                                                       kind),
 }
+
+# small fixed subset exercised by `python -m repro.tuna tune --smoke`
+# (CI cold-start check: one matmul + one batched space, seconds to tune)
+SMOKE_OPERATORS = ("dense_256", "batch_matmul")

@@ -13,6 +13,7 @@ from repro.core.visa import lower_program, VisaProgram
 from repro.core.instcount import count_instructions, match_loops, InstReport
 from repro.core.ilp import analyze_ilp, IlpReport
 from repro.core.cost_model import (
+    COST_MODEL_VERSION,
     Features,
     ScheduleMeta,
     coefficients,
@@ -28,4 +29,11 @@ from repro.core.spaces import (
     MatmulSpace,
     Space,
 )
-from repro.core.tuner import TuneResult, rank_space, tune, tuned_matmul_blocks
+from repro.core.tuner import (
+    TuneResult,
+    best_schedule,
+    rank_space,
+    set_default_db,
+    tune,
+    tuned_matmul_blocks,
+)

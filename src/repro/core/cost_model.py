@@ -32,6 +32,13 @@ from repro.core.locality import analyze_locality
 from repro.core.tir import Program
 from repro.hw.target import HardwareTarget
 
+# Version tag of the feature extractor + coefficient derivation. Schedule
+# records persisted by ``repro.tuna`` are keyed by this string: bump it
+# whenever ``extract_features``/``coefficients``/``score`` change meaning, so
+# stored schedules are re-derived instead of silently reused with stale
+# scores (tests/test_tuna.py pins the cm1 feature vector as a golden).
+COST_MODEL_VERSION = "cm1"
+
 
 @dataclasses.dataclass(frozen=True)
 class Features:

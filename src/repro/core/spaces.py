@@ -78,6 +78,21 @@ class Space:
     def instantiate(self, cfg: Dict) -> Tuple[Program, ScheduleMeta]:
         raise NotImplementedError
 
+    def signature(self) -> str:
+        """Canonical operator signature, e.g. ``matmul[K=256,M=256,N=256,
+        dtype_bytes=4]`` — the ``op`` key of `repro.tuna` schedule records.
+
+        Built from the scalar attributes that define the operator *instance*
+        (shapes, dtype width), not the schedule knobs and not ``target_kind``
+        (the record's ``target`` field already pins the hardware)."""
+        attrs = {
+            k: v for k, v in vars(self).items()
+            if not k.startswith("_") and k not in ("knobs", "target_kind")
+            and isinstance(v, int)
+        }
+        inner = ",".join(f"{k}={attrs[k]}" for k in sorted(attrs))
+        return f"{self.name}[{inner}]"
+
 
 # ---------------------------------------------------------------------------
 # Matmul

@@ -7,20 +7,105 @@ model as fitness; ``rank_space`` exhaustively scores a space (used by the
 top-k experiments and by the kernel library's block-spec picker, whose spaces
 are small). Results are memoised per (space signature, target) so model code
 can call ``tuned_matmul_blocks`` at trace time for free.
+
+Persistence: because scores are pure functions of (op signature, target,
+cost-model version), both entry points consult the ``repro.tuna`` schedule
+database before searching and write back on miss. ``db`` arguments accept a
+``ScheduleDatabase``, a path, ``None`` (= the process default set via
+``set_default_db`` / the ``REPRO_TUNA_DB`` env var), or ``False`` (bypass —
+used by the orchestrator, which manages its own store).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
+import json
+import os
 import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import cost_model, es
+from repro.core.cost_model import COST_MODEL_VERSION
 from repro.core.spaces import MatmulSpace, Space
 from repro.hw import get_target
 from repro.hw.target import HardwareTarget
+
+_UNSET = object()
+_DEFAULT_DB = _UNSET  # _UNSET = fall back to $REPRO_TUNA_DB; None = off
+_PATH_DBS: Dict[str, object] = {}  # abspath -> ScheduleDatabase (one load
+#                                    per path per process, not per call)
+_MEMO_CLEARERS: List = []  # block-spec lru cache_clear hooks (kernels/ops
+#                            registers tuned_flash_blocks here — tuner can't
+#                            import kernels, which pulls in jax)
+
+
+def register_memo_clearer(fn) -> None:
+    _MEMO_CLEARERS.append(fn)
+
+
+def _clear_memos() -> None:
+    tuned_matmul_blocks.cache_clear()
+    for fn in _MEMO_CLEARERS:
+        fn()
+
+
+def _open_db(path):
+    key = os.path.abspath(os.fspath(path))
+    if key not in _PATH_DBS:
+        from repro.tuna.db import ScheduleDatabase
+
+        _PATH_DBS[key] = ScheduleDatabase(key)
+    return _PATH_DBS[key]
+
+
+def set_default_db(db) -> None:
+    """Install the process-wide warm schedule DB (path or ScheduleDatabase).
+    ``None`` switches the default OFF, including the ``$REPRO_TUNA_DB``
+    fallback. Clears the block-spec memo caches so already-traced shapes
+    re-resolve against the new store."""
+    global _DEFAULT_DB
+    if isinstance(db, (str, os.PathLike)):
+        db = _open_db(db)
+    _DEFAULT_DB = db
+    _clear_memos()
+
+
+def get_default_db():
+    """The installed default DB, else one opened from ``$REPRO_TUNA_DB``."""
+    global _DEFAULT_DB
+    if _DEFAULT_DB is _UNSET:
+        path = os.environ.get("REPRO_TUNA_DB")
+        _DEFAULT_DB = _open_db(path) if path else None
+    return _DEFAULT_DB
+
+
+def resolve_db(db):
+    """Coerce a ``db`` argument to a ScheduleDatabase or None: ``False`` →
+    off, ``None`` → the process default, a path → the per-path cached
+    instance (one log read per process), an instance → itself."""
+    if db is False:
+        return None
+    if db is None:
+        return get_default_db()
+    if isinstance(db, (str, os.PathLike)):
+        return _open_db(db)
+    return db
+
+
+def record_version(coeffs: Optional[Dict[str, float]] = None) -> str:
+    """Cost-model version tag for a schedule record. Datasheet coefficients
+    → plain ``cm1``. Custom (calibrated) coefficients are host-specific, so
+    their scores are only comparable to records from the same fit — the
+    coefficient fingerprint becomes part of the key, keeping merged stores
+    from mixing incomparable score scales."""
+    if coeffs is None:
+        return COST_MODEL_VERSION
+    blob = json.dumps(coeffs, sort_keys=True, default=float)
+    fp = hashlib.sha1(blob.encode()).hexdigest()[:8]
+    return f"{COST_MODEL_VERSION}-cal-{fp}"
 
 
 @dataclasses.dataclass
@@ -31,6 +116,7 @@ class TuneResult:
     wall_seconds: float
     history: List[float]
     default_score: float  # score of the space's centre config (no tuning)
+    from_db: bool = False  # True when served from the schedule database
 
 
 def _score_config(space: Space, target: HardwareTarget, cfg: Dict,
@@ -46,8 +132,29 @@ def tune(
     population: int = 16,
     seed: int = 0,
     workers: int = 8,
+    db=None,
 ) -> TuneResult:
+    """ES search (Alg. 4); warm-DB hits return with **zero** cost-model
+    evaluations, misses are written back under strategy ``es``."""
     t0 = time.perf_counter()
+    store = resolve_db(db)
+    if store is not None:
+        rec = store.best(space.signature(), target.name)
+        if rec is not None:
+            # NaN when the stored record carries no default_score (e.g. it
+            # was written by rank_space) — a warm hit spends zero
+            # evaluations, so we won't recompute it here
+            return TuneResult(
+                config=dict(rec.config),
+                score=rec.score,
+                evaluations=0,
+                wall_seconds=time.perf_counter() - t0,
+                history=[],
+                default_score=float(
+                    rec.meta.get("default_score", float("nan"))),
+                from_db=True,
+            )
+
     cache: Dict[Tuple, float] = {}
 
     def fitness(theta: np.ndarray) -> float:
@@ -67,7 +174,7 @@ def tune(
     )
     best_cfg = space.decode(res.best_theta)
     best_score = _score_config(space, target, best_cfg)
-    return TuneResult(
+    result = TuneResult(
         config=best_cfg,
         score=best_score,
         evaluations=res.evaluations,
@@ -75,19 +182,74 @@ def tune(
         history=res.history,
         default_score=_score_config(space, target, space.default_config()),
     )
+    if store is not None:
+        from repro.tuna.db import ScheduleRecord
+
+        store.add(ScheduleRecord(
+            op=space.signature(),
+            target=target.name,
+            config=dict(best_cfg),
+            score=best_score,
+            evaluations=res.evaluations,
+            meta={"strategy": "es", "default_score": result.default_score},
+        ))
+    return result
 
 
 def rank_space(
     space: Space, target: HardwareTarget, limit: int = 4096,
     coeffs: Optional[Dict[str, float]] = None,
+    db=False,
 ) -> List[Tuple[Dict, float]]:
-    """Static exhaustive ranking (ascending score = predicted fastest first)."""
+    """Static exhaustive ranking (ascending score = predicted fastest first).
+
+    Callers need the full ranking, which the DB does not store, so this is a
+    *write-back* integration: when a store resolves, the winning record is
+    appended under strategy ``exhaustive`` (``best_schedule`` is the
+    read path). Calibrated-coefficient rankings are stored under a
+    fingerprinted version (``cm1-cal-<hash>``, see ``record_version``) so
+    they never collide with datasheet scores or other hosts' fits.
+    """
     scored = [
         (cfg, _score_config(space, target, cfg, coeffs))
         for cfg in space.enumerate(limit)
     ]
     scored.sort(key=lambda cs: cs[1])
+    store = resolve_db(db)
+    if store is not None and scored:
+        from repro.tuna.db import ScheduleRecord
+
+        version = record_version(coeffs)
+        meta = {"strategy": "exhaustive", "limit": limit}
+        dflt = space.default_config()
+        default_score = next((s for c, s in scored if c == dflt), None)
+        if default_score is not None:  # centre config inside the limit
+            meta["default_score"] = default_score
+        store.add(ScheduleRecord(
+            op=space.signature(),
+            target=target.name,
+            config=dict(scored[0][0]),
+            score=scored[0][1],
+            evaluations=len(scored),
+            meta=meta,
+            version=version,
+        ))
     return scored
+
+
+def best_schedule(
+    space: Space, target: HardwareTarget, limit: int = 1024, db=None,
+) -> Tuple[Dict, float]:
+    """Best (config, score) for a space: DB hit → zero evaluations; miss →
+    exhaustive rank + write back. The kernel block-spec pickers sit on this."""
+    store = resolve_db(db)
+    if store is not None:
+        rec = store.best(space.signature(), target.name)
+        if rec is not None:
+            return dict(rec.config), rec.score
+    ranked = rank_space(space, target, limit=limit,
+                        db=store if store is not None else False)
+    return ranked[0]
 
 
 @functools.lru_cache(maxsize=256)
@@ -98,9 +260,9 @@ def tuned_matmul_blocks(
 
     Exhaustive over the (small) block space: this is what a production
     compilation service would run at model-compile time, on any host, with no
-    TPU attached (the paper's cross-compilation requirement)."""
+    TPU attached (the paper's cross-compilation requirement). Consults the
+    default schedule DB first, so a warm store makes this a pure lookup."""
     target = get_target(target_name)
     space = MatmulSpace(M, N, K, dtype_bytes, target_kind="tpu")
-    ranked = rank_space(space, target, limit=1024)
-    best = ranked[0][0]
+    best, _ = best_schedule(space, target, limit=1024)
     return best["bm"], best["bn"], best["bk"]

@@ -9,6 +9,9 @@ jnp reference paths:
 
 Tuning happens at trace time via ``core.tuner`` — pure static analysis, no
 device execution, memoised per shape (the paper's compilation-service flow).
+Both block-spec pickers consult the warm ``repro.tuna`` schedule DB first
+(``use_schedule_db(path)`` or ``$REPRO_TUNA_DB``): on a warm store, trace
+time pays a dict lookup, not a search.
 """
 from __future__ import annotations
 
@@ -18,6 +21,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import tuner
 from repro.core.tuner import rank_space, tuned_matmul_blocks
 from repro.core.spaces import MatmulSpace
 from repro.hw import get_target
@@ -30,6 +34,11 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def use_schedule_db(path) -> None:
+    """Point the kernel block-spec pickers at a warm schedule database."""
+    tuner.set_default_db(path)  # clears all registered block-spec memos
+
+
 @functools.lru_cache(maxsize=256)
 def tuned_flash_blocks(
     s: int, d: int, dtype_bytes: int = 2, target_name: str = "tpu_v5e"
@@ -37,13 +46,21 @@ def tuned_flash_blocks(
     """Static block_q/block_k choice for flash attention: score the induced
     (q·kᵀ then p·v) tile working set with the matmul space's cost model."""
     target = get_target(target_name)
+    db = tuner.get_default_db()
+    sig = f"flash[d={d},dtype_bytes={dtype_bytes},s={s}]"
+    if db is not None:
+        rec = db.best(sig, target.name)
+        if rec is not None:
+            return rec.config["block_q"], rec.config["block_k"]
     best = (None, float("inf"))
+    evals = 0
     for bq in (128, 256, 512, 1024):
         if s % bq or bq > s:
             continue
         for bk_ in (128, 256, 512, 1024):
             if s % bk_ or bk_ > s:
                 continue
+            evals += 1
             # tile working set: q, k, v, acc + softmax stats, double-buffered
             vmem = (bq * d + 2 * bk_ * d + bq * d) * dtype_bytes + bq * (
                 2 * 128 + bk_
@@ -59,7 +76,23 @@ def tuned_flash_blocks(
             score = t * steps
             if score < best[1]:
                 best = ((bq, bk_), score)
-    return best[0] or (min(512, s), min(512, s))
+    blocks = best[0] or (min(512, s), min(512, s))
+    if db is not None and best[0] is not None:
+        from repro.tuna.db import ScheduleRecord
+
+        db.add(ScheduleRecord(
+            op=sig, target=target.name,
+            config={"block_q": blocks[0], "block_k": blocks[1]},
+            score=best[1],
+            evaluations=evals,
+            meta={"strategy": "flash_grid"},
+        ))
+    return blocks
+
+
+# set_default_db must invalidate this memo too (it lives here, not in
+# core.tuner, because importing kernels pulls in jax)
+tuner.register_memo_clearer(tuned_flash_blocks.cache_clear)
 
 
 def matmul(

@@ -1,0 +1,17 @@
+"""Version shims for ``jax.experimental.pallas`` across jax releases."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 names this TPUCompilerParams
+_COMPILER_PARAMS_CLS = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None))
+
+
+def compiler_params(**kwargs):
+    """Build the TPU compiler-params struct for ``pl.pallas_call``."""
+    if _COMPILER_PARAMS_CLS is None:
+        raise ImportError(
+            "this jax exposes neither pallas tpu CompilerParams nor "
+            "TPUCompilerParams; cannot build TPU kernel compiler params")
+    return _COMPILER_PARAMS_CLS(**kwargs)

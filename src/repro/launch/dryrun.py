@@ -37,7 +37,10 @@ from repro.parallel import context as pctx  # noqa: E402
 from repro.parallel import sharding as sh  # noqa: E402
 
 
-def _flops_bytes(cost: Dict[str, float]):
+def _flops_bytes(cost):
+    # jax < 0.5 wraps cost_analysis() in a one-element list
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     return cost.get("flops", 0.0), cost.get("bytes accessed", 0.0)
 
 
@@ -225,8 +228,21 @@ def main() -> None:
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--schedule-db", default=None,
+                    help="warm repro.tuna schedule DB (JSONL) for trace-time "
+                         "kernel block-spec picks; only consulted when "
+                         "kernels lower for TPU (host-forced CPU compiles "
+                         "take the jnp reference path)")
     args = ap.parse_args()
 
+    if args.schedule_db:
+        from repro.kernels.ops import use_schedule_db
+
+        use_schedule_db(args.schedule_db)
+        if jax.default_backend() != "tpu":
+            print("[tuna] note: --schedule-db installed, but this dry run "
+                  "compiles on the CPU backend where kernels use the "
+                  "reference path; block-spec picks are not exercised")
     os.makedirs(args.out, exist_ok=True)
     archs = ARCH_IDS if args.all or not args.arch else [args.arch]
     shapes = list(S.SHAPES) if args.all or not args.shape else [args.shape]

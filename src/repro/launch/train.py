@@ -183,8 +183,15 @@ def main() -> None:
     ap.add_argument("--grad-compression", choices=["int8"], default=None)
     ap.add_argument("--mesh", default=None,
                     help="e.g. 2x4 (needs XLA_FLAGS host devices)")
+    ap.add_argument("--schedule-db", default=None,
+                    help="warm repro.tuna schedule DB (JSONL); kernel "
+                         "block-spec picks become pure lookups")
     args = ap.parse_args()
 
+    if args.schedule_db:
+        from repro.kernels.ops import use_schedule_db
+
+        use_schedule_db(args.schedule_db)
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()

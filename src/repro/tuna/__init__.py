@@ -1,0 +1,14 @@
+"""repro.tuna — persistent schedule database + parallel tuning service.
+
+The MITuna-style layer over the static tuner: ``db`` persists ``cm1``
+schedule records keyed by (op signature, target, cost-model version);
+``orchestrator`` fans tuning jobs over a process pool; ``cli`` drives both
+(``python -m repro.tuna``). ``core.tuner`` consults the DB transparently —
+see ``tuner.set_default_db`` / the ``REPRO_TUNA_DB`` env var.
+
+Only ``db`` is imported eagerly (``core.tuner`` lazily imports it; keeping
+this module light avoids an import cycle with ``repro.core``).
+"""
+from repro.tuna.db import ScheduleDatabase, ScheduleRecord, SCHEMA
+
+__all__ = ["ScheduleDatabase", "ScheduleRecord", "SCHEMA"]

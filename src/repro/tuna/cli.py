@@ -1,0 +1,147 @@
+"""``python -m repro.tuna`` — operate the persistent schedule database.
+
+Subcommands:
+  tune     fan (ops × targets) jobs across a worker pool into the DB
+  query    print best records (filter by --op prefix / --target / --version)
+  compact  rewrite the log keeping only the best record per key
+  export   dump best records as a JSON array
+
+Examples:
+  python -m repro.tuna tune --ops dense_256,conv2d --targets tpu_v5e,cpu_avx2
+  python -m repro.tuna tune --smoke          # CI cold-start check
+  python -m repro.tuna query --op matmul --target tpu_v5e
+  python -m repro.tuna compact
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import List, Optional
+
+from repro.configs.tuna_ops import OPERATORS, SMOKE_OPERATORS
+from repro.hw import TARGETS
+from repro.tuna import orchestrator
+from repro.tuna.db import ScheduleDatabase
+
+DEFAULT_DB = "experiments/schedule_db.jsonl"
+
+
+def _csv(s: str) -> List[str]:
+    return [x for x in (p.strip() for p in s.split(",")) if x]
+
+
+def cmd_tune(args: argparse.Namespace) -> int:
+    if args.smoke:
+        ops = list(SMOKE_OPERATORS)
+        targets = ["tpu_v5e"]
+        workers = min(args.workers, 2)
+        limit = min(args.limit, 256)
+    else:
+        ops = _csv(args.ops) if args.ops != "all" else list(OPERATORS)
+        targets = _csv(args.targets)
+        workers, limit = args.workers, args.limit
+    for op in ops:
+        if op not in OPERATORS:
+            print(f"error: unknown operator {op!r}; have {sorted(OPERATORS)}",
+                  file=sys.stderr)
+            return 2
+    for t in targets:
+        if t not in TARGETS:
+            print(f"error: unknown target {t!r}; have {sorted(TARGETS)}",
+                  file=sys.stderr)
+            return 2
+    db = ScheduleDatabase(args.db)
+    jobs = orchestrator.jobs_for(ops, targets, strategy=args.strategy,
+                                 limit=limit, seed=args.seed)
+    report = orchestrator.run(jobs, db=db, workers=workers,
+                              retries=args.retries, verbose=True)
+    print(f"[tuna] {len(report.records)}/{len(jobs)} jobs done in "
+          f"{report.wall_seconds:.1f}s -> {args.db} ({len(db)} keys)")
+    for fail in report.failures:
+        print(f"[tuna] FAILED {fail.job.op} @ {fail.job.target} after "
+              f"{fail.attempts} attempts:\n{fail.error}", file=sys.stderr)
+    return 0 if report.ok else 1
+
+
+def cmd_query(args: argparse.Namespace) -> int:
+    db = ScheduleDatabase(args.db)
+    recs = db.query(op=args.op, target=args.target, version=args.version)
+    if not recs:
+        print("no matching records", file=sys.stderr)
+        return 1
+    for rec in recs:
+        print(json.dumps(dataclasses.asdict(rec), sort_keys=True,
+                         default=float))
+    return 0
+
+
+def cmd_compact(args: argparse.Namespace) -> int:
+    db = ScheduleDatabase(args.db)
+    dropped = db.compact()
+    print(f"[tuna] compacted {args.db}: {len(db)} keys kept, "
+          f"{dropped} superseded lines dropped")
+    return 0
+
+
+def cmd_export(args: argparse.Namespace) -> int:
+    db = ScheduleDatabase(args.db)
+    n = db.export(args.out)
+    print(f"[tuna] exported {n} records -> {args.out}")
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="repro.tuna", description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("tune", help="run tuning jobs into the DB")
+    p.add_argument("--db", default=DEFAULT_DB)
+    p.add_argument("--ops", default="all",
+                   help="comma-separated configs.tuna_ops names, or 'all'")
+    p.add_argument("--targets", default="tpu_v5e,cpu_avx2")
+    p.add_argument("--strategy", choices=["exhaustive", "es"],
+                   default="exhaustive")
+    p.add_argument("--workers", type=int, default=4)
+    p.add_argument("--retries", type=int, default=2)
+    p.add_argument("--limit", type=int, default=1024)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny fixed job set (CI cold-start check)")
+    p.set_defaults(fn=cmd_tune)
+
+    p = sub.add_parser("query", help="print best records")
+    p.add_argument("--db", default=DEFAULT_DB)
+    p.add_argument("--op", default=None, help="exact op signature or prefix")
+    p.add_argument("--target", default=None)
+    p.add_argument("--version", default=None)
+    p.set_defaults(fn=cmd_query)
+
+    p = sub.add_parser("compact", help="drop superseded log lines")
+    p.add_argument("--db", default=DEFAULT_DB)
+    p.set_defaults(fn=cmd_compact)
+
+    p = sub.add_parser("export", help="dump best records as JSON")
+    p.add_argument("--db", default=DEFAULT_DB)
+    p.add_argument("--out", default="experiments/schedule_db.json")
+    p.set_defaults(fn=cmd_export)
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        return args.fn(args)
+    except BrokenPipeError:
+        # downstream head/pager closed the pipe: the unix-normal exit.
+        # Re-point stdout at devnull so interpreter shutdown doesn't print
+        # a spurious "Exception ignored" on the final flush.
+        import os
+
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

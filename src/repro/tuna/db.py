@@ -1,0 +1,250 @@
+"""Persistent schedule database — the MITuna-style service substrate.
+
+Tuna schedules are derived *statically*, so a result is a pure function of
+``(operator signature, target, cost-model version)`` and can be persisted and
+shared across processes/hosts instead of recomputed per process (the same
+observation behind AutoTVM tuning logs and TLP's record datasets).
+
+Storage is an **append-only JSONL** file, schema ``cm1`` — one record per
+line, formalising the ad-hoc ``experiments/schedule_db.jsonl`` format:
+
+    {
+      "op":          "matmul[K=256,M=256,N=256,dtype_bytes=2]",
+      "target":      "tpu_v5e",
+      "version":     "cm1",                 # cost-model version (see
+                                            # repro.core.cost_model)
+      "config":      {"bm": 256, ...},      # winning schedule knobs
+      "score":       2.82e-06,              # predicted cost (lower = faster)
+      "evaluations": 48,                    # cost-model calls spent finding it
+      "meta":        {"strategy": "exhaustive", "default_score": ...}
+    }
+
+Appends are single ``write`` calls on an ``O_APPEND`` handle (atomic on
+POSIX); compaction rewrites via temp-file + ``os.replace`` so readers never
+observe a half-written store. The in-memory index keeps the *best* (lowest
+score) record per key; the log keeps full history until ``compact()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import threading
+from typing import Dict, Iterator, List, Optional, Tuple
+
+try:  # POSIX cross-process lock; degrades to thread-only elsewhere
+    import fcntl
+
+    def _flock(f) -> None:
+        fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+except ImportError:  # pragma: no cover
+    def _flock(f) -> None:
+        pass
+
+from repro.core.cost_model import COST_MODEL_VERSION
+
+SCHEMA = "cm1"
+
+Key = Tuple[str, str, str]  # (op signature, target name, cost-model version)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleRecord:
+    op: str
+    target: str
+    config: Dict
+    score: float
+    evaluations: int = 0
+    meta: Dict = dataclasses.field(default_factory=dict)
+    version: str = COST_MODEL_VERSION
+
+    @property
+    def key(self) -> Key:
+        return (self.op, self.target, self.version)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True,
+                          default=float)
+
+    @classmethod
+    def from_json(cls, line: str) -> "ScheduleRecord":
+        obj = json.loads(line)
+        return cls(
+            op=str(obj["op"]),
+            target=str(obj["target"]),
+            config=dict(obj["config"]),
+            score=float(obj["score"]),
+            evaluations=int(obj.get("evaluations", 0)),
+            meta=dict(obj.get("meta", {})),
+            version=str(obj.get("version", COST_MODEL_VERSION)),
+        )
+
+
+class ScheduleDatabase:
+    """JSONL-backed schedule store with an in-memory best-record index.
+
+    ``path=None`` gives a purely in-memory database (tests, dry runs). A
+    path that does not exist yet is created on first ``add``.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = os.fspath(path) if path is not None else None
+        self._lock = threading.Lock()
+        self._best: Dict[Key, ScheduleRecord] = {}
+        self.lines_read = 0
+        self.corrupt_lines = 0
+        if self.path and os.path.exists(self.path):
+            for rec in self._iter_file(self.path):
+                self._absorb(rec)
+
+    # -- loading ---------------------------------------------------------
+
+    def _iter_file(self, path: str) -> Iterator[ScheduleRecord]:
+        with open(path, "r", encoding="utf-8") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = ScheduleRecord.from_json(line)
+                except (ValueError, KeyError, TypeError):
+                    self.corrupt_lines += 1
+                    continue
+                self.lines_read += 1
+                yield rec
+
+    def _absorb(self, rec: ScheduleRecord) -> bool:
+        """Index ``rec``; True iff it is a new key or beats the incumbent."""
+        cur = self._best.get(rec.key)
+        if cur is None or rec.score < cur.score:
+            self._best[rec.key] = rec
+            return True
+        return False
+
+    # -- writes ----------------------------------------------------------
+
+    def add(self, rec: ScheduleRecord, persist: bool = True) -> bool:
+        """Append ``rec`` to the log and index it. Returns True iff the
+        record became the best for its key."""
+        with self._lock:
+            improved = self._absorb(rec)
+            if persist and self.path:
+                d = os.path.dirname(self.path)
+                if d:
+                    os.makedirs(d, exist_ok=True)
+                self._append_locked(rec.to_json() + "\n")
+        return improved
+
+    def _append_locked(self, line: str) -> None:
+        """Append under the cross-process lock; if a concurrent ``compact``
+        replaced the log while we waited (our fd then points at the orphaned
+        inode), reopen against the new file and retry."""
+        while True:
+            with open(self.path, "a", encoding="utf-8") as f:
+                _flock(f)
+                try:
+                    cur_ino = os.stat(self.path).st_ino
+                except FileNotFoundError:
+                    continue
+                if os.fstat(f.fileno()).st_ino != cur_ino:
+                    continue
+                f.write(line)
+                return
+
+    def merge(self, other_path: str) -> int:
+        """Absorb another store's records; persists only the improving ones
+        (the log stays append-only, compaction prunes). Returns how many
+        records improved/extended this store."""
+        absorbed = 0
+        for rec in self._iter_file(other_path):
+            if self._would_improve(rec):
+                self.add(rec, persist=True)
+                absorbed += 1
+        return absorbed
+
+    def _would_improve(self, rec: ScheduleRecord) -> bool:
+        cur = self._best.get(rec.key)
+        return cur is None or rec.score < cur.score
+
+    def compact(self) -> int:
+        """Rewrite the log keeping only the best record per key (atomic
+        replace). Holds the cross-process lock and re-reads the log first,
+        so records appended by other processes since our load are absorbed
+        rather than clobbered. Returns the number of log lines dropped
+        (superseded duplicates + corrupt lines)."""
+        if not self.path:
+            return 0
+        with self._lock:
+            d = os.path.dirname(self.path) or "."
+            os.makedirs(d, exist_ok=True)
+            while True:
+                with open(self.path, "a+", encoding="utf-8") as f:
+                    _flock(f)
+                    if os.fstat(f.fileno()).st_ino != os.stat(self.path).st_ino:
+                        continue  # lost a race with another compact; reopen
+                    f.seek(0)
+                    before = 0
+                    for line in f:
+                        if not line.strip():
+                            continue
+                        before += 1
+                        try:
+                            self._absorb(ScheduleRecord.from_json(line))
+                        except (ValueError, KeyError, TypeError):
+                            pass  # corrupt line: healed by the rewrite
+                    records = [self._best[k] for k in sorted(self._best)]
+                    fd, tmp = tempfile.mkstemp(dir=d, suffix=".jsonl.tmp")
+                    try:
+                        with os.fdopen(fd, "w", encoding="utf-8") as out:
+                            for rec in records:
+                                out.write(rec.to_json() + "\n")
+                        os.replace(tmp, self.path)
+                    except BaseException:
+                        if os.path.exists(tmp):
+                            os.unlink(tmp)
+                        raise
+                    return before - len(records)
+
+    # -- queries ---------------------------------------------------------
+
+    def best(self, op: str, target: str,
+             version: str = COST_MODEL_VERSION) -> Optional[ScheduleRecord]:
+        return self._best.get((op, target, version))
+
+    def query(self, op: Optional[str] = None, target: Optional[str] = None,
+              version: Optional[str] = None) -> List[ScheduleRecord]:
+        """Best records matching the filters; ``op`` matches exactly or as a
+        prefix (so ``matmul`` matches every matmul shape)."""
+        out = []
+        for key in sorted(self._best):
+            rec = self._best[key]
+            if op is not None and not (rec.op == op or rec.op.startswith(op)):
+                continue
+            if target is not None and rec.target != target:
+                continue
+            if version is not None and rec.version != version:
+                continue
+            out.append(rec)
+        return out
+
+    def records(self) -> List[ScheduleRecord]:
+        return [self._best[k] for k in sorted(self._best)]
+
+    def export(self, out_path: str) -> int:
+        """Write the best records as a JSON array (for dashboards / diffing);
+        returns the record count."""
+        records = [dataclasses.asdict(r) for r in self.records()]
+        d = os.path.dirname(out_path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(out_path, "w", encoding="utf-8") as f:
+            json.dump(records, f, indent=2, sort_keys=True, default=float)
+            f.write("\n")
+        return len(records)
+
+    def __len__(self) -> int:
+        return len(self._best)
+
+    def __contains__(self, key: Key) -> bool:
+        return key in self._best

@@ -5,5 +5,18 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True)
+def _no_default_schedule_db():
+    """Isolate every test from the process-default schedule DB — without
+    this, a developer's $REPRO_TUNA_DB would warm-hit search-behavior tests
+    and get dirtied by their write-backs."""
+    from repro.core import tuner
+
+    tuner.set_default_db(None)
+    yield
+    tuner.set_default_db(None)

@@ -125,6 +125,7 @@ class TestCheckpoint:
         assert store.latest_step(str(tmp_path)) == 1
 
 
+@pytest.mark.slow  # full train/crash/restart cycles: end-to-end, not tier-1
 class TestFaultTolerance:
     def _opts(self, tmp_path, steps=12):
         return TrainOptions(steps=steps, batch=2, seq=16,
