@@ -13,7 +13,10 @@ cost-model version), both entry points consult the ``repro.tuna`` schedule
 database before searching and write back on miss. ``db`` arguments accept a
 ``ScheduleDatabase``, a path, ``None`` (= the process default set via
 ``set_default_db`` / the ``REPRO_TUNA_DB`` env var), or ``False`` (bypass —
-used by the orchestrator, which manages its own store).
+used by the orchestrator, which manages its own store). An immutable
+serving snapshot (``repro.tuna.cache.ScheduleCache``, installed via
+``set_default_cache`` / ``$REPRO_TUNA_CACHE``) is consulted before the DB
+on every read — the lock-free hot path for serving processes.
 """
 from __future__ import annotations
 
@@ -35,8 +38,10 @@ from repro.hw.target import HardwareTarget
 
 _UNSET = object()
 _DEFAULT_DB = _UNSET  # _UNSET = fall back to $REPRO_TUNA_DB; None = off
+_DEFAULT_CACHE = _UNSET  # _UNSET = fall back to $REPRO_TUNA_CACHE
 _PATH_DBS: Dict[str, object] = {}  # abspath -> ScheduleDatabase (one load
 #                                    per path per process, not per call)
+_PATH_CACHES: Dict[str, object] = {}  # abspath -> ScheduleCache snapshot
 _MEMO_CLEARERS: List = []  # block-spec lru cache_clear hooks (kernels/ops
 #                            registers tuned_flash_blocks here — tuner can't
 #                            import kernels, which pulls in jax)
@@ -85,7 +90,8 @@ def get_default_db():
 def resolve_db(db):
     """Coerce a ``db`` argument to a ScheduleDatabase or None: ``False`` →
     off, ``None`` → the process default, a path → the per-path cached
-    instance (one log read per process), an instance → itself."""
+    instance (one log read per process), an instance → itself (a
+    ``ScheduleCache`` instance acts as a read-only store)."""
     if db is False:
         return None
     if db is None:
@@ -93,6 +99,78 @@ def resolve_db(db):
     if isinstance(db, (str, os.PathLike)):
         return _open_db(db)
     return db
+
+
+def _writable(store) -> bool:
+    """Write-back gate: ``ScheduleCache`` is an immutable snapshot, so
+    results found by a live search are not persisted through it."""
+    return store is not None and not getattr(store, "immutable", False)
+
+
+def _open_cache(path):
+    """Per-path snapshot instances, revalidated by stat: a snapshot is
+    immutable once loaded, so rebuilding the file (``os.replace`` → new
+    inode/mtime) must hand out a fresh instance, not the stale one."""
+    key = os.path.abspath(os.fspath(path))
+    st = os.stat(key)
+    stamp = (st.st_mtime_ns, st.st_size)
+    cached = _PATH_CACHES.get(key)
+    if cached is None or cached[0] != stamp:
+        from repro.tuna.cache import ScheduleCache
+
+        _PATH_CACHES[key] = (stamp, ScheduleCache.load(key))
+    return _PATH_CACHES[key][1]
+
+
+def set_default_cache(cache) -> None:
+    """Install the process-wide serving snapshot (path or ScheduleCache),
+    consulted *before* the schedule DB on every read. ``None`` switches it
+    OFF, including the ``$REPRO_TUNA_CACHE`` fallback. Clears the
+    block-spec memo caches so already-traced shapes re-resolve."""
+    global _DEFAULT_CACHE
+    if isinstance(cache, (str, os.PathLike)):
+        cache = _open_cache(cache)
+    _DEFAULT_CACHE = cache
+    _clear_memos()
+
+
+def get_default_cache():
+    """The installed snapshot, else one loaded from ``$REPRO_TUNA_CACHE``.
+    An env-var path that does not exist yet (snapshot not built) resolves
+    to OFF instead of failing every lookup — unlike ``set_default_cache``,
+    where an explicit install of a missing file raises."""
+    global _DEFAULT_CACHE
+    if _DEFAULT_CACHE is _UNSET:
+        path = os.environ.get("REPRO_TUNA_CACHE")
+        try:
+            _DEFAULT_CACHE = _open_cache(path) if path else None
+        except FileNotFoundError:
+            _DEFAULT_CACHE = None
+    return _DEFAULT_CACHE
+
+
+def _lookup(op: str, target_name: str, version: str, db):
+    """Read path shared by tune/best_schedule/block-spec pickers: snapshot
+    cache first (O(1), lock-free), then the schedule DB. Returns
+    ``(record or None, "cache"|"db"|"")`` and never searches."""
+    cache = get_default_cache()
+    if cache is not None:
+        rec = cache.best(op, target_name, version)
+        if rec is not None:
+            return rec, "cache"
+    store = resolve_db(db)
+    if store is not None and store is not cache:
+        rec = store.best(op, target_name, version)
+        if rec is not None:
+            return rec, "db"
+    return None, ""
+
+
+def lookup_best(op: str, target_name: str,
+                version: str = COST_MODEL_VERSION, db=None):
+    """Best stored record for a key — serving-cache first, then the DB
+    (``db`` follows ``resolve_db`` semantics). None on a full miss."""
+    return _lookup(op, target_name, version, db)[0]
 
 
 def record_version(coeffs: Optional[Dict[str, float]] = None) -> str:
@@ -117,6 +195,7 @@ class TuneResult:
     history: List[float]
     default_score: float  # score of the space's centre config (no tuning)
     from_db: bool = False  # True when served from the schedule database
+    from_cache: bool = False  # True when the hit came from a ScheduleCache
 
 
 def _score_config(space: Space, target: HardwareTarget, cfg: Dict,
@@ -137,9 +216,9 @@ def tune(
     """ES search (Alg. 4); warm-DB hits return with **zero** cost-model
     evaluations, misses are written back under strategy ``es``."""
     t0 = time.perf_counter()
-    store = resolve_db(db)
-    if store is not None:
-        rec = store.best(space.signature(), target.name)
+    if db is not False:  # False = full bypass, snapshot cache included
+        rec, source = _lookup(space.signature(), target.name,
+                              COST_MODEL_VERSION, db)
         if rec is not None:
             # NaN when the stored record carries no default_score (e.g. it
             # was written by rank_space) — a warm hit spends zero
@@ -153,8 +232,11 @@ def tune(
                 default_score=float(
                     rec.meta.get("default_score", float("nan"))),
                 from_db=True,
+                from_cache=source == "cache",
             )
 
+    store = resolve_db(db)  # resolved on the miss path only: a snapshot
+    #                         hit must not pay a JSONL log load
     cache: Dict[Tuple, float] = {}
 
     def fitness(theta: np.ndarray) -> float:
@@ -182,7 +264,7 @@ def tune(
         history=res.history,
         default_score=_score_config(space, target, space.default_config()),
     )
-    if store is not None:
+    if _writable(store):
         from repro.tuna.db import ScheduleRecord
 
         store.add(ScheduleRecord(
@@ -216,7 +298,7 @@ def rank_space(
     ]
     scored.sort(key=lambda cs: cs[1])
     store = resolve_db(db)
-    if store is not None and scored:
+    if _writable(store) and scored:
         from repro.tuna.db import ScheduleRecord
 
         version = record_version(coeffs)
@@ -240,15 +322,16 @@ def rank_space(
 def best_schedule(
     space: Space, target: HardwareTarget, limit: int = 1024, db=None,
 ) -> Tuple[Dict, float]:
-    """Best (config, score) for a space: DB hit → zero evaluations; miss →
-    exhaustive rank + write back. The kernel block-spec pickers sit on this."""
-    store = resolve_db(db)
-    if store is not None:
-        rec = store.best(space.signature(), target.name)
+    """Best (config, score) for a space: snapshot-cache or DB hit → zero
+    evaluations; miss → exhaustive rank + write back (to a writable store
+    only). The kernel block-spec pickers sit on this."""
+    if db is not False:
+        rec = lookup_best(space.signature(), target.name, db=db)
         if rec is not None:
             return dict(rec.config), rec.score
+    store = resolve_db(db)  # miss path only, like tune()
     ranked = rank_space(space, target, limit=limit,
-                        db=store if store is not None else False)
+                        db=store if _writable(store) else False)
     return ranked[0]
 
 

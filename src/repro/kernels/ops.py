@@ -9,9 +9,11 @@ jnp reference paths:
 
 Tuning happens at trace time via ``core.tuner`` — pure static analysis, no
 device execution, memoised per shape (the paper's compilation-service flow).
-Both block-spec pickers consult the warm ``repro.tuna`` schedule DB first
-(``use_schedule_db(path)`` or ``$REPRO_TUNA_DB``): on a warm store, trace
-time pays a dict lookup, not a search.
+Both block-spec pickers consult the serving snapshot cache
+(``use_schedule_cache(path)`` or ``$REPRO_TUNA_CACHE``) and then the warm
+``repro.tuna`` schedule DB (``use_schedule_db(path)`` or
+``$REPRO_TUNA_DB``): on a warm store, trace time pays a dict lookup, not a
+search.
 """
 from __future__ import annotations
 
@@ -39,6 +41,12 @@ def use_schedule_db(path) -> None:
     tuner.set_default_db(path)  # clears all registered block-spec memos
 
 
+def use_schedule_cache(path) -> None:
+    """Serve block-spec picks from an immutable snapshot (``python -m
+    repro.tuna snapshot``) — consulted before the DB, O(1) and lock-free."""
+    tuner.set_default_cache(path)  # clears all registered block-spec memos
+
+
 @functools.lru_cache(maxsize=256)
 def tuned_flash_blocks(
     s: int, d: int, dtype_bytes: int = 2, target_name: str = "tpu_v5e"
@@ -48,10 +56,9 @@ def tuned_flash_blocks(
     target = get_target(target_name)
     db = tuner.get_default_db()
     sig = f"flash[d={d},dtype_bytes={dtype_bytes},s={s}]"
-    if db is not None:
-        rec = db.best(sig, target.name)
-        if rec is not None:
-            return rec.config["block_q"], rec.config["block_k"]
+    rec = tuner.lookup_best(sig, target.name)  # snapshot cache, then DB
+    if rec is not None:
+        return rec.config["block_q"], rec.config["block_k"]
     best = (None, float("inf"))
     evals = 0
     for bq in (128, 256, 512, 1024):
@@ -77,7 +84,7 @@ def tuned_flash_blocks(
             if score < best[1]:
                 best = ((bq, bk_), score)
     blocks = best[0] or (min(512, s), min(512, s))
-    if db is not None and best[0] is not None:
+    if tuner._writable(db) and best[0] is not None:
         from repro.tuna.db import ScheduleRecord
 
         db.add(ScheduleRecord(

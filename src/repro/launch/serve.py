@@ -85,7 +85,23 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--schedule-db", default=None,
+                    help="warm repro.tuna schedule DB (JSONL) so trace-time "
+                         "block-spec picks are lookups, not searches")
+    ap.add_argument("--schedule-cache", default=None,
+                    help="immutable schedule snapshot (python -m repro.tuna "
+                         "snapshot); consulted before the DB — the lock-free "
+                         "serving hot path")
     args = ap.parse_args()
+
+    if args.schedule_db:
+        from repro.kernels.ops import use_schedule_db
+
+        use_schedule_db(args.schedule_db)
+    if args.schedule_cache:
+        from repro.kernels.ops import use_schedule_cache
+
+        use_schedule_cache(args.schedule_cache)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -102,6 +118,12 @@ def main() -> None:
     stats = serve(model, params, reqs, slots=args.slots, cap=cap)
     print(f"[serve] {stats['tokens']} tokens in {stats['wall_s']:.2f}s "
           f"({stats['tok_per_s']:.1f} tok/s, {stats['engine_steps']} engine steps)")
+    if args.schedule_cache:
+        from repro.core import tuner
+
+        cache = tuner.get_default_cache()
+        print(f"[serve] schedule cache: {cache.hits} hits / "
+              f"{cache.misses} misses ({len(cache)} records)")
 
 
 if __name__ == "__main__":

@@ -1,14 +1,18 @@
-"""repro.tuna — persistent schedule database + parallel tuning service.
+"""repro.tuna — persistent schedule database + distributed tuning fleet.
 
 The MITuna-style layer over the static tuner: ``db`` persists ``cm1``
 schedule records keyed by (op signature, target, cost-model version);
-``orchestrator`` fans tuning jobs over a process pool; ``cli`` drives both
-(``python -m repro.tuna``). ``core.tuner`` consults the DB transparently —
-see ``tuner.set_default_db`` / the ``REPRO_TUNA_DB`` env var.
+``orchestrator`` fans tuning jobs over a process pool; ``fleet`` shards the
+job matrix across hosts and reconciles per-shard stores; ``cache`` compiles
+the store into an immutable serving-time snapshot; ``cli`` drives all of it
+(``python -m repro.tuna``). ``core.tuner`` consults the snapshot and the DB
+transparently — see ``tuner.set_default_db`` / ``set_default_cache`` and
+the ``REPRO_TUNA_DB`` / ``REPRO_TUNA_CACHE`` env vars.
 
-Only ``db`` is imported eagerly (``core.tuner`` lazily imports it; keeping
-this module light avoids an import cycle with ``repro.core``).
+Only ``db`` and ``cache`` are imported eagerly (``orchestrator``/``fleet``
+pull in ``repro.core``; keeping this module light avoids an import cycle).
 """
+from repro.tuna.cache import ScheduleCache
 from repro.tuna.db import ScheduleDatabase, ScheduleRecord, SCHEMA
 
-__all__ = ["ScheduleDatabase", "ScheduleRecord", "SCHEMA"]
+__all__ = ["ScheduleCache", "ScheduleDatabase", "ScheduleRecord", "SCHEMA"]

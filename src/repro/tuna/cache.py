@@ -1,0 +1,151 @@
+"""Serving-time schedule cache — an immutable snapshot of the store.
+
+The JSONL store is optimised for *writes*: append-only log, cross-process
+locks, best-record index rebuilt on every open. The serving hot path wants
+the opposite trade — pure reads at request rate, no locks, no log scans —
+the same offline/online split as TPU learned-cost-model serving: tune
+offline into the store, then compile the best-record set into a flat
+artifact and serve lookups from that. ``ScheduleCache`` is the artifact:
+built by ``python -m repro.tuna snapshot`` (or ``ScheduleCache.build``),
+loaded once, immutable thereafter, so ``best()`` is a single dict probe
+with no lock acquisition — safe to share across serving threads.
+
+Snapshot files are one JSON object (schema ``tuna-snapshot-v1``) carrying a
+sha1 digest over the record payload; ``load`` verifies it, so a torn copy
+from a fleet rsync fails loudly instead of silently serving half a store.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.core.cost_model import COST_MODEL_VERSION
+from repro.tuna.db import (
+    Key,
+    ScheduleDatabase,
+    ScheduleRecord,
+    query_index,
+    record_beats,
+)
+
+SNAPSHOT_SCHEMA = "tuna-snapshot-v1"
+
+
+def _payload(records: Sequence[Dict]) -> str:
+    # canonical serialization shared by save() and load(): json round-trips
+    # floats via shortest-repr, so dump(load(dump(x))) == dump(x)
+    return json.dumps(list(records), sort_keys=True, default=float)
+
+
+class ScheduleCache:
+    """Immutable best-record index with O(1) lock-free lookups."""
+
+    immutable = True  # write paths (tuner write-backs) check this flag
+
+    def __init__(self, records: Sequence[ScheduleRecord],
+                 source: str = "<memory>"):
+        best: Dict[Key, ScheduleRecord] = {}
+        for rec in records:
+            cur = best.get(rec.key)
+            if cur is None or record_beats(rec, cur):
+                best[rec.key] = rec
+        self._best = best
+        self.source = source
+        self.hits = 0    # serving stats: plain ints, never locked (exact
+        self.misses = 0  # under the GIL, approximate under free threading)
+
+    # -- build / persist -------------------------------------------------
+
+    @classmethod
+    def from_db(cls, db: ScheduleDatabase) -> "ScheduleCache":
+        return cls(db.records(), source=db.path or "<memory>")
+
+    @classmethod
+    def build(cls, db: Union[str, os.PathLike, ScheduleDatabase],
+              out_path: str) -> "ScheduleCache":
+        """Compile a store (path or instance) into a snapshot file."""
+        if not isinstance(db, ScheduleDatabase):
+            db = ScheduleDatabase(os.fspath(db))
+        cache = cls.from_db(db)
+        cache.save(out_path)
+        return cache
+
+    def save(self, out_path: str) -> int:
+        """Write the snapshot (atomic temp-file + replace); returns the
+        record count."""
+        records = [dataclasses.asdict(r) for r in self.records()]
+        payload = _payload(records)
+        obj = {
+            "schema": SNAPSHOT_SCHEMA,
+            "cost_model_version": COST_MODEL_VERSION,
+            "source": self.source,
+            "count": len(records),
+            "sha1": hashlib.sha1(payload.encode()).hexdigest(),
+            "records": records,
+        }
+        d = os.path.dirname(out_path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".snapshot.tmp")
+        try:
+            with os.fdopen(fd, "w", encoding="utf-8") as f:
+                json.dump(obj, f, sort_keys=True, default=float)
+                f.write("\n")
+            os.replace(tmp, out_path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        return len(records)
+
+    @classmethod
+    def load(cls, path: str) -> "ScheduleCache":
+        """Load + verify a snapshot; raises ValueError on schema mismatch
+        or digest corruption."""
+        with open(path, "r", encoding="utf-8") as f:
+            obj = json.load(f)
+        if obj.get("schema") != SNAPSHOT_SCHEMA:
+            raise ValueError(
+                f"{path}: not a schedule snapshot "
+                f"(schema={obj.get('schema')!r}, want {SNAPSHOT_SCHEMA!r})")
+        digest = hashlib.sha1(_payload(obj["records"]).encode()).hexdigest()
+        if digest != obj.get("sha1"):
+            raise ValueError(
+                f"{path}: snapshot digest mismatch (corrupt or torn copy); "
+                f"rebuild with `python -m repro.tuna snapshot`")
+        records = [ScheduleRecord.from_dict(r) for r in obj["records"]]
+        return cls(records, source=obj.get("source", path))
+
+    # -- reads (the serving hot path) ------------------------------------
+
+    def best(self, op: str, target: str,
+             version: str = COST_MODEL_VERSION) -> Optional[ScheduleRecord]:
+        rec = self._best.get((op, target, version))
+        if rec is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return rec
+
+    def query(self, op: Optional[str] = None, target: Optional[str] = None,
+              version: Optional[str] = None) -> List[ScheduleRecord]:
+        """Same filter semantics as ``ScheduleDatabase.query`` (shared
+        implementation, so the stores cannot diverge)."""
+        return query_index(self._best, op=op, target=target, version=version)
+
+    def records(self) -> List[ScheduleRecord]:
+        return [self._best[k] for k in sorted(self._best)]
+
+    def add(self, *args, **kwargs):
+        raise TypeError(
+            "ScheduleCache is an immutable snapshot; write to the "
+            "ScheduleDatabase and rebuild (`python -m repro.tuna snapshot`)")
+
+    def __len__(self) -> int:
+        return len(self._best)
+
+    def __contains__(self, key: Key) -> bool:
+        return key in self._best

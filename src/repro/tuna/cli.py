@@ -1,10 +1,22 @@
 """``python -m repro.tuna`` — operate the persistent schedule database.
 
 Subcommands:
-  tune     fan (ops × targets) jobs across a worker pool into the DB
-  query    print best records (filter by --op prefix / --target / --version)
+  tune     fan (ops × targets) jobs across a worker pool into the DB;
+           --num-shards/--shard-id take one deterministic slice of the
+           matrix into a per-shard store (the fleet write path)
+  sync     merge per-shard stores back into the base store (+ provenance);
+           --verify fails on any divergence from a reference store
+  snapshot compile the store into an immutable serving cache (JSON + sha1)
+  query    print best records (filter by --op prefix / --target /
+           --version; --snapshot reads a compiled cache instead of the DB)
   compact  rewrite the log keeping only the best record per key
   export   dump best records as a JSON array
+
+Fleet workflow (each host owns a shard id; see repro.tuna.fleet):
+  python -m repro.tuna tune --db db.jsonl --num-shards 4 --shard-id 2
+  python -m repro.tuna sync --db db.jsonl --num-shards 4
+  python -m repro.tuna snapshot --db db.jsonl --out cache.json
+  python -m repro.tuna query --snapshot cache.json --op matmul
 
 Examples:
   python -m repro.tuna tune --ops dense_256,conv2d --targets tpu_v5e,cpu_avx2
@@ -52,22 +64,79 @@ def cmd_tune(args: argparse.Namespace) -> int:
             print(f"error: unknown target {t!r}; have {sorted(TARGETS)}",
                   file=sys.stderr)
             return 2
-    db = ScheduleDatabase(args.db)
     jobs = orchestrator.jobs_for(ops, targets, strategy=args.strategy,
                                  limit=limit, seed=args.seed)
+    db_path = args.db
+    if args.num_shards < 1:
+        print("error: --num-shards must be >= 1", file=sys.stderr)
+        return 2
+    if not 0 <= args.shard_id < args.num_shards:
+        print(f"error: --shard-id must be in [0, {args.num_shards})",
+              file=sys.stderr)
+        return 2
+    if args.num_shards > 1:
+        from repro.tuna import fleet
+
+        jobs = fleet.shard_jobs(jobs, args.num_shards, args.shard_id)
+        # even an empty shard leaves a store file so sync can tell
+        # "finished with no jobs" apart from "crashed"
+        db_path = fleet.touch_store(
+            fleet.shard_store_path(args.db, args.shard_id))
+        print(f"[tuna] shard {args.shard_id}/{args.num_shards}: "
+              f"{len(jobs)} jobs -> {db_path}")
+    db = ScheduleDatabase(db_path)
     report = orchestrator.run(jobs, db=db, workers=workers,
                               retries=args.retries, verbose=True)
     print(f"[tuna] {len(report.records)}/{len(jobs)} jobs done in "
-          f"{report.wall_seconds:.1f}s -> {args.db} ({len(db)} keys)")
+          f"{report.wall_seconds:.1f}s -> {db_path} ({len(db)} keys)")
     for fail in report.failures:
         print(f"[tuna] FAILED {fail.job.op} @ {fail.job.target} after "
               f"{fail.attempts} attempts:\n{fail.error}", file=sys.stderr)
     return 0 if report.ok else 1
 
 
+def cmd_sync(args: argparse.Namespace) -> int:
+    from repro.tuna import fleet
+
+    rep = fleet.sync(args.db, args.num_shards,
+                     provenance=not args.no_provenance,
+                     compact=not args.no_compact)
+    for path, n in rep.absorbed.items():
+        print(f"[tuna] {path}: absorbed {n} records")
+    for path in rep.skipped:
+        print(f"[tuna] missing shard store {path} (skipped; re-run sync "
+              f"after the shard finishes)", file=sys.stderr)
+    print(f"[tuna] synced {args.db}: {rep.keys} keys from "
+          f"{args.num_shards - len(rep.skipped)}/{args.num_shards} shards")
+    if args.verify:
+        ref = ScheduleDatabase(args.verify)
+        div = fleet.divergence(rep.db, ref, label_a=args.db,
+                               label_b=args.verify)
+        if div:
+            print("[tuna] MERGE DIVERGENCE:", file=sys.stderr)
+            for msg in div:
+                print(f"  {msg}", file=sys.stderr)
+            return 1
+        print(f"[tuna] verified against {args.verify}: no divergence")
+    return 0
+
+
+def cmd_snapshot(args: argparse.Namespace) -> int:
+    from repro.tuna.cache import ScheduleCache
+
+    cache = ScheduleCache.build(args.db, args.out)
+    print(f"[tuna] snapshot {args.out}: {len(cache)} records from {args.db}")
+    return 0
+
+
 def cmd_query(args: argparse.Namespace) -> int:
-    db = ScheduleDatabase(args.db)
-    recs = db.query(op=args.op, target=args.target, version=args.version)
+    if args.snapshot:
+        from repro.tuna.cache import ScheduleCache
+
+        store = ScheduleCache.load(args.snapshot)
+    else:
+        store = ScheduleDatabase(args.db)
+    recs = store.query(op=args.op, target=args.target, version=args.version)
     if not recs:
         print("no matching records", file=sys.stderr)
         return 1
@@ -109,10 +178,36 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--smoke", action="store_true",
                    help="tiny fixed job set (CI cold-start check)")
+    p.add_argument("--num-shards", type=int, default=1,
+                   help="fleet size: stable-hash the job matrix into this "
+                        "many disjoint shards")
+    p.add_argument("--shard-id", type=int, default=0,
+                   help="which shard this host owns (writes to "
+                        "<db>.shardNN.jsonl)")
     p.set_defaults(fn=cmd_tune)
+
+    p = sub.add_parser("sync", help="merge per-shard stores into the base DB")
+    p.add_argument("--db", default=DEFAULT_DB, help="base store path")
+    p.add_argument("--num-shards", type=int, required=True)
+    p.add_argument("--no-provenance", action="store_true",
+                   help="do not stamp meta.provenance on absorbed records")
+    p.add_argument("--no-compact", action="store_true",
+                   help="keep the merged log uncompacted")
+    p.add_argument("--verify", default=None, metavar="REF_DB",
+                   help="fail (exit 1) if the merged store diverges from "
+                        "this reference store")
+    p.set_defaults(fn=cmd_sync)
+
+    p = sub.add_parser("snapshot",
+                       help="compile the store into a serving cache")
+    p.add_argument("--db", default=DEFAULT_DB)
+    p.add_argument("--out", default="experiments/schedule_cache.json")
+    p.set_defaults(fn=cmd_snapshot)
 
     p = sub.add_parser("query", help="print best records")
     p.add_argument("--db", default=DEFAULT_DB)
+    p.add_argument("--snapshot", default=None,
+                   help="query a compiled snapshot instead of the JSONL DB")
     p.add_argument("--op", default=None, help="exact op signature or prefix")
     p.add_argument("--target", default=None)
     p.add_argument("--version", default=None)

@@ -31,7 +31,7 @@ import json
 import os
 import tempfile
 import threading
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 try:  # POSIX cross-process lock; degrades to thread-only elsewhere
     import fcntl
@@ -69,7 +69,10 @@ class ScheduleRecord:
 
     @classmethod
     def from_json(cls, line: str) -> "ScheduleRecord":
-        obj = json.loads(line)
+        return cls.from_dict(json.loads(line))
+
+    @classmethod
+    def from_dict(cls, obj: Dict) -> "ScheduleRecord":
         return cls(
             op=str(obj["op"]),
             target=str(obj["target"]),
@@ -79,6 +82,49 @@ class ScheduleRecord:
             meta=dict(obj.get("meta", {})),
             version=str(obj.get("version", COST_MODEL_VERSION)),
         )
+
+
+def query_index(index: Dict[Key, ScheduleRecord], op: Optional[str] = None,
+                target: Optional[str] = None,
+                version: Optional[str] = None) -> List[ScheduleRecord]:
+    """Filter a best-record index (shared by ``ScheduleDatabase.query`` and
+    ``ScheduleCache.query`` so the two stores can never diverge): ``op``
+    matches exactly or as a prefix (``matmul`` matches every matmul
+    shape), ``target``/``version`` match exactly."""
+    out = []
+    for key in sorted(index):
+        rec = index[key]
+        if op is not None and not (rec.op == op or rec.op.startswith(op)):
+            continue
+        if target is not None and rec.target != target:
+            continue
+        if version is not None and rec.version != version:
+            continue
+        out.append(rec)
+    return out
+
+
+def _canonical(rec: ScheduleRecord) -> str:
+    """Canonical record JSON with merge bookkeeping stripped: the
+    provenance stamp says which shard a record travelled through, which
+    must never decide who wins a tie (a fleet-merged store and a
+    single-process store would otherwise pick different winners)."""
+    obj = dataclasses.asdict(rec)
+    obj["meta"] = {k: v for k, v in obj["meta"].items() if k != "provenance"}
+    return json.dumps(obj, sort_keys=True, default=float)
+
+
+def record_beats(rec: ScheduleRecord, cur: ScheduleRecord) -> bool:
+    """Preference order between same-key records: lower score wins; exact
+    score ties break on the canonical (provenance-stripped) record JSON,
+    and a canonical tie keeps the incumbent. A total order over canonical
+    records is what makes merges commutative, associative, and idempotent
+    — the winner for a key is independent of arrival order, so fleet
+    shards can sync in any order and every host converges on the same
+    store."""
+    if rec.score != cur.score:
+        return rec.score < cur.score
+    return _canonical(rec) < _canonical(cur)
 
 
 class ScheduleDatabase:
@@ -117,7 +163,7 @@ class ScheduleDatabase:
     def _absorb(self, rec: ScheduleRecord) -> bool:
         """Index ``rec``; True iff it is a new key or beats the incumbent."""
         cur = self._best.get(rec.key)
-        if cur is None or rec.score < cur.score:
+        if cur is None or record_beats(rec, cur):
             self._best[rec.key] = rec
             return True
         return False
@@ -152,20 +198,48 @@ class ScheduleDatabase:
                 f.write(line)
                 return
 
-    def merge(self, other_path: str) -> int:
+    def merge(self, other_path: str, provenance=None) -> int:
         """Absorb another store's records; persists only the improving ones
-        (the log stays append-only, compaction prunes). Returns how many
-        records improved/extended this store."""
+        (the log stays append-only, compaction prunes). Conflicts resolve by
+        the total record order (cost-model version is part of the key; lower
+        score wins, ties break canonically). ``provenance=True`` stamps
+        absorbed records with ``meta["provenance"] = <source basename>`` (a
+        string label is used verbatim) so a merged store says which shard
+        each winner came from. Returns how many records improved/extended
+        this store."""
+        if provenance is True:
+            provenance = os.path.basename(os.fspath(other_path))
         absorbed = 0
         for rec in self._iter_file(other_path):
+            if provenance:
+                rec = dataclasses.replace(
+                    rec, meta={**rec.meta, "provenance": provenance})
             if self._would_improve(rec):
                 self.add(rec, persist=True)
                 absorbed += 1
         return absorbed
 
+    def merge_all(self, paths: Sequence[str], provenance=True) -> Dict[str, int]:
+        """Merge several shard stores; returns absorbed counts per path."""
+        return {os.fspath(p): self.merge(p, provenance=provenance)
+                for p in paths}
+
+    @classmethod
+    def sync(cls, dst_path: str, shard_paths: Sequence[str],
+             provenance=True, compact: bool = True,
+             ) -> Tuple["ScheduleDatabase", Dict[str, int]]:
+        """Reconcile per-shard stores into ``dst_path`` (the fleet read side
+        of ``repro.tuna.fleet``): open the base store, absorb every shard,
+        optionally compact. Returns ``(merged db, absorbed counts)``."""
+        db = cls(dst_path)
+        stats = db.merge_all(shard_paths, provenance=provenance)
+        if compact:
+            db.compact()
+        return db, stats
+
     def _would_improve(self, rec: ScheduleRecord) -> bool:
         cur = self._best.get(rec.key)
-        return cur is None or rec.score < cur.score
+        return cur is None or record_beats(rec, cur)
 
     def compact(self) -> int:
         """Rewrite the log keeping only the best record per key (atomic
@@ -216,17 +290,7 @@ class ScheduleDatabase:
               version: Optional[str] = None) -> List[ScheduleRecord]:
         """Best records matching the filters; ``op`` matches exactly or as a
         prefix (so ``matmul`` matches every matmul shape)."""
-        out = []
-        for key in sorted(self._best):
-            rec = self._best[key]
-            if op is not None and not (rec.op == op or rec.op.startswith(op)):
-                continue
-            if target is not None and rec.target != target:
-                continue
-            if version is not None and rec.version != version:
-                continue
-            out.append(rec)
-        return out
+        return query_index(self._best, op=op, target=target, version=version)
 
     def records(self) -> List[ScheduleRecord]:
         return [self._best[k] for k in sorted(self._best)]

@@ -1,0 +1,193 @@
+"""Distributed tuning fleet — shard the job matrix, tune, reconcile.
+
+Tuna results are pure functions of (op signature, target, cost-model
+version): there is no device in the tuning loop, so the MITuna-style fleet
+split collapses to *pure bookkeeping*. ``shard_jobs`` deterministically
+partitions the (operator × target × strategy) job matrix by hashing each
+job's canonical form — shards are disjoint, covering, and stable across
+runs and hosts, so re-running a shard is idempotent and any host can own
+any shard id. Each shard tunes through the ordinary orchestrator into its
+own store (``<base>.shardNN.jsonl``); ``sync`` reconciles shard stores into
+the base store whenever they become reachable, resolving conflicts by the
+total record order (cost-model version is part of the key, then best
+score) and stamping per-shard provenance into ``meta``. A crashed shard
+simply stays missing until its host re-runs it — sync skips absent stores
+and reports them.
+
+Workflow (also exposed by ``python -m repro.tuna``):
+
+    jobs = orchestrator.jobs_for(ops, targets)     # the shared matrix
+    # on host i of N:
+    fleet.run_shard(jobs, N, i, base)              # -> base.shard0i.jsonl
+    # on any host, once shard stores are visible:
+    fleet.sync(base, N)                            # -> base (merged)
+    ScheduleCache.build(base, out)                 # -> serving snapshot
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from repro.tuna import orchestrator
+from repro.tuna.db import ScheduleDatabase, ScheduleRecord
+from repro.tuna.orchestrator import TuneJob
+
+PROVENANCE_KEY = "provenance"
+
+
+# -- deterministic sharding ----------------------------------------------
+
+def job_fingerprint(job: TuneJob) -> str:
+    """Stable content hash of a job (all fields, canonical JSON) — the
+    same job hashes identically on every host and every run."""
+    blob = json.dumps(dataclasses.asdict(job), sort_keys=True)
+    return hashlib.sha1(blob.encode()).hexdigest()
+
+
+def shard_of(job: TuneJob, num_shards: int) -> int:
+    return int(job_fingerprint(job), 16) % num_shards
+
+
+def shard_jobs(jobs: Sequence[TuneJob], num_shards: int,
+               shard_id: int) -> List[TuneJob]:
+    """The subset of ``jobs`` owned by ``shard_id``. Partitions are
+    disjoint and covering by construction (every job hashes to exactly one
+    shard) and independent of the order jobs are listed in."""
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    if not 0 <= shard_id < num_shards:
+        raise ValueError(
+            f"shard_id must be in [0, {num_shards}), got {shard_id}")
+    return [j for j in jobs if shard_of(j, num_shards) == shard_id]
+
+
+def shard_store_path(base_path: str, shard_id: int) -> str:
+    """Per-shard store path derived from the base store path:
+    ``db.jsonl`` -> ``db.shard03.jsonl`` (derivation is shared by tune and
+    sync, so hosts never have to agree on anything but base + shard id)."""
+    root, ext = os.path.splitext(os.fspath(base_path))
+    return f"{root}.shard{shard_id:02d}{ext or '.jsonl'}"
+
+
+# -- running shards -------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardRun:
+    shard_id: int
+    store_path: str
+    jobs: int
+    report: orchestrator.RunReport
+
+    @property
+    def ok(self) -> bool:
+        return self.report.ok
+
+
+@dataclasses.dataclass
+class FleetReport:
+    shards: List[ShardRun]
+
+    @property
+    def ok(self) -> bool:
+        return all(s.ok for s in self.shards)
+
+    @property
+    def records(self) -> List[ScheduleRecord]:
+        return [r for s in self.shards for r in s.report.records]
+
+
+def touch_store(path: str) -> str:
+    """Create an empty store file if absent. A shard whose slice of the
+    matrix happens to be empty must still leave a store behind — sync
+    distinguishes 'shard finished with nothing to do' (empty file) from
+    'shard crashed / hasn't run' (no file)."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    open(path, "a", encoding="utf-8").close()
+    return path
+
+
+def run_shard(jobs: Sequence[TuneJob], num_shards: int, shard_id: int,
+              base_path: str, **run_kwargs) -> ShardRun:
+    """Tune this shard's slice of the matrix into its own store (the
+    existing orchestrator does the work; extra kwargs pass through)."""
+    mine = shard_jobs(jobs, num_shards, shard_id)
+    store = ScheduleDatabase(touch_store(shard_store_path(base_path,
+                                                          shard_id)))
+    report = orchestrator.run(mine, db=store, **run_kwargs)
+    return ShardRun(shard_id, store.path, len(mine), report)
+
+
+def run_fleet(jobs: Sequence[TuneJob], num_shards: int, base_path: str,
+              shard_ids: Optional[Iterable[int]] = None,
+              **run_kwargs) -> FleetReport:
+    """Run shards in one process (tests, single-host fleets); on a real
+    fleet each host calls ``run_shard`` for the ids it owns."""
+    ids = range(num_shards) if shard_ids is None else shard_ids
+    return FleetReport([
+        run_shard(jobs, num_shards, sid, base_path, **run_kwargs)
+        for sid in ids
+    ])
+
+
+# -- reconciliation -------------------------------------------------------
+
+@dataclasses.dataclass
+class SyncReport:
+    base_path: str
+    absorbed: Dict[str, int]          # shard store path -> records absorbed
+    skipped: List[str]                # shard stores not found (crashed/late)
+    keys: int                         # merged store size
+    db: ScheduleDatabase = dataclasses.field(repr=False, default=None)
+
+
+def sync(base_path: str, num_shards: int, provenance: bool = True,
+         compact: bool = True, missing_ok: bool = True) -> SyncReport:
+    """Merge every present shard store into the base store. Missing shard
+    stores (a crashed or not-yet-finished host) are skipped and reported —
+    re-running ``sync`` after the shard resumes completes the merge, and
+    re-syncing an already-merged shard is a no-op (the total record order
+    makes absorption idempotent)."""
+    paths = [shard_store_path(base_path, i) for i in range(num_shards)]
+    present = [p for p in paths if os.path.exists(p)]
+    skipped = [p for p in paths if not os.path.exists(p)]
+    if skipped and not missing_ok:
+        raise FileNotFoundError(f"missing shard stores: {skipped}")
+    db, stats = ScheduleDatabase.sync(base_path, present,
+                                      provenance=provenance, compact=compact)
+    return SyncReport(os.fspath(base_path), stats, skipped, len(db), db)
+
+
+def divergence(a, b, label_a: str = "a", label_b: str = "b") -> List[str]:
+    """Human-readable differences between two stores' best-record sets
+    (``ScheduleDatabase`` or ``ScheduleCache``), ignoring merge provenance.
+    Empty list == equivalent; used by ``sync --verify`` to fail CI on any
+    fleet-vs-single-process divergence."""
+    recs_a = {r.key: r for r in a.records()}
+    recs_b = {r.key: r for r in b.records()}
+    msgs = []
+
+    def _meta(rec: ScheduleRecord) -> Dict:
+        return {k: v for k, v in rec.meta.items() if k != PROVENANCE_KEY}
+
+    for key in sorted(set(recs_a) | set(recs_b)):
+        ra, rb = recs_a.get(key), recs_b.get(key)
+        if ra is None:
+            msgs.append(f"{key}: only in {label_b}")
+        elif rb is None:
+            msgs.append(f"{key}: only in {label_a}")
+        else:
+            for field, va, vb in (
+                ("config", ra.config, rb.config),
+                ("score", ra.score, rb.score),
+                ("evaluations", ra.evaluations, rb.evaluations),
+                ("meta", _meta(ra), _meta(rb)),
+            ):
+                if va != vb:
+                    msgs.append(f"{key}: {field} differs "
+                                f"({label_a}={va!r}, {label_b}={vb!r})")
+    return msgs

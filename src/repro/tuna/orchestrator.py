@@ -102,10 +102,17 @@ def run(
     retries: int = 2,
     start_method: str = "spawn",
     verbose: bool = False,
+    runner=run_job,
 ) -> RunReport:
     """Fan ``jobs`` out over ``workers`` processes (inline when ``workers <=
     1``), retrying each failed job up to ``retries`` extra times, streaming
-    completed records into ``db``."""
+    completed records into ``db``. ``runner`` must be a picklable
+    module-level callable (the fleet and tests substitute it).
+
+    Retry accounting is per *submission*, not per job value: ``TuneJob`` is
+    a frozen dataclass, so duplicate jobs in one run compare equal — keying
+    attempts by the job itself would make duplicates share one counter and
+    exhaust each other's retries."""
     t0 = time.perf_counter()
     records: List[ScheduleRecord] = []
     failures: List[JobFailure] = []
@@ -124,7 +131,7 @@ def run(
             for attempt in range(retries + 1):
                 attempts = attempt + 1
                 try:
-                    _land(run_job(job))
+                    _land(runner(job))
                     break
                 except Exception:  # noqa: BLE001
                     err = traceback.format_exc(limit=3)
@@ -133,25 +140,26 @@ def run(
         return RunReport(records, failures, time.perf_counter() - t0)
 
     ctx = multiprocessing.get_context(start_method)
-    attempts: Dict[TuneJob, int] = {}
+    attempts: Dict[int, int] = {}  # submission index -> attempts so far
     with cf.ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as pool:
-        pending = {pool.submit(run_job, job): job for job in jobs}
-        for job in jobs:
-            attempts[job] = 1
+        pending = {}
+        for idx, job in enumerate(jobs):
+            pending[pool.submit(runner, job)] = (idx, job)
+            attempts[idx] = 1
         while pending:
             done, _ = cf.wait(pending, return_when=cf.FIRST_COMPLETED)
             for fut in done:
-                job = pending.pop(fut)
+                idx, job = pending.pop(fut)
                 try:
                     _land(fut.result())
                 except Exception:  # noqa: BLE001
-                    if attempts[job] <= retries:
-                        attempts[job] += 1
-                        pending[pool.submit(run_job, job)] = job
+                    if attempts[idx] <= retries:
+                        attempts[idx] += 1
+                        pending[pool.submit(runner, job)] = (idx, job)
                     else:
                         failures.append(JobFailure(
                             job, traceback.format_exc(limit=3),
-                            attempts[job]))
+                            attempts[idx]))
     return RunReport(records, failures, time.perf_counter() - t0)
 
 

@@ -12,11 +12,14 @@ jax.config.update("jax_enable_x64", False)
 
 @pytest.fixture(autouse=True)
 def _no_default_schedule_db():
-    """Isolate every test from the process-default schedule DB — without
-    this, a developer's $REPRO_TUNA_DB would warm-hit search-behavior tests
-    and get dirtied by their write-backs."""
+    """Isolate every test from the process-default schedule DB and serving
+    snapshot — without this, a developer's $REPRO_TUNA_DB/$REPRO_TUNA_CACHE
+    would warm-hit search-behavior tests and (for the DB) get dirtied by
+    their write-backs."""
     from repro.core import tuner
 
     tuner.set_default_db(None)
+    tuner.set_default_cache(None)
     yield
     tuner.set_default_db(None)
+    tuner.set_default_cache(None)

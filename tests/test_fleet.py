@@ -1,0 +1,332 @@
+"""Distributed tuning fleet: deterministic sharding, store sync, the
+serving snapshot cache, cross-process store hardening, retry accounting.
+
+The acceptance spine: a 3-shard fleet run + ``sync`` + ``snapshot`` must
+yield the same best-record set as a single-process run over the same job
+matrix — record for record, with only per-shard provenance added.
+
+This module is imported by spawned worker processes (the stress and retry
+tests), so it must stay jax-free: everything here is numpy-backed.
+"""
+import json
+import multiprocessing
+import os
+
+import pytest
+
+from repro.tuna import fleet, orchestrator
+from repro.tuna.cache import ScheduleCache
+from repro.tuna.db import ScheduleDatabase, ScheduleRecord
+from repro.tuna.orchestrator import TuneJob
+
+# ops × targets × strategies; dense_256@tpu_v5e appears under both
+# strategies, so sync must also resolve a same-key conflict
+JOB_OPS = ["dense_256", "dense_512", "batch_matmul", "depthwise_conv2d"]
+JOB_TARGETS = ["tpu_v5e", "cpu_avx2"]
+
+
+def _matrix():
+    jobs = orchestrator.jobs_for(JOB_OPS, JOB_TARGETS, limit=64)
+    jobs += orchestrator.jobs_for(["dense_256"], ["tpu_v5e"],
+                                  strategy="es", limit=64)
+    return jobs
+
+
+def _strip(db):
+    """Best records as comparable tuples, provenance removed."""
+    return [
+        (r.op, r.target, r.version, json.dumps(r.config, sort_keys=True),
+         r.score, r.evaluations,
+         {k: v for k, v in r.meta.items() if k != "provenance"})
+        for r in db.records()
+    ]
+
+
+class TestShardJobs:
+    @pytest.mark.parametrize("num_shards", [1, 2, 3, 5])
+    def test_disjoint_and_covering(self, num_shards):
+        jobs = _matrix()
+        shards = [fleet.shard_jobs(jobs, num_shards, i)
+                  for i in range(num_shards)]
+        assert sum(len(s) for s in shards) == len(jobs)
+        seen = [fleet.job_fingerprint(j) for s in shards for j in s]
+        assert sorted(seen) == sorted(fleet.job_fingerprint(j) for j in jobs)
+        assert len(set(seen)) == len(jobs)  # pairwise disjoint
+
+    def test_stable_across_runs_and_list_order(self):
+        jobs = _matrix()
+        a = fleet.shard_jobs(jobs, 3, 1)
+        b = fleet.shard_jobs(list(reversed(jobs)), 3, 1)
+        assert sorted(map(fleet.job_fingerprint, a)) == \
+            sorted(map(fleet.job_fingerprint, b))
+        assert fleet.shard_jobs(jobs, 3, 1) == a  # re-run: identical slice
+
+    def test_invalid_arguments_rejected(self):
+        with pytest.raises(ValueError):
+            fleet.shard_jobs([], 0, 0)
+        with pytest.raises(ValueError):
+            fleet.shard_jobs([], 2, 2)
+
+    def test_shard_store_path_derivation(self):
+        assert fleet.shard_store_path("db.jsonl", 3) == "db.shard03.jsonl"
+        assert fleet.shard_store_path("/x/store", 0) == "/x/store.shard00.jsonl"
+
+
+class TestFleetEndToEnd:
+    def test_three_shard_fleet_matches_single_run(self, tmp_path):
+        """Acceptance: shard → tune → sync → snapshot reproduces the
+        single-process store record-for-record, including the crash-one-
+        shard-then-resume path and idempotent re-sync."""
+        jobs = _matrix()
+        single = ScheduleDatabase(tmp_path / "single.jsonl")
+        assert orchestrator.run(jobs, db=single, workers=1).ok
+
+        base = str(tmp_path / "fleet.jsonl")
+        # shard 2's host "crashes" before tuning: only 0 and 1 run
+        partial_run = fleet.run_fleet(jobs, 3, base, workers=1,
+                                      shard_ids=[0, 1])
+        assert partial_run.ok
+        assert all(s.jobs > 0 for s in partial_run.shards)
+        partial = fleet.sync(base, 3)
+        assert [os.path.basename(p) for p in partial.skipped] == \
+            ["fleet.shard02.jsonl"]
+        assert 0 < partial.keys < len(single)
+
+        # the host comes back and re-runs its shard; sync completes
+        resumed = fleet.run_shard(jobs, 3, 2, base, workers=1)
+        assert resumed.ok and resumed.jobs > 0
+        full = fleet.sync(base, 3)
+        assert not full.skipped
+
+        assert fleet.divergence(full.db, single, "fleet", "single") == []
+        assert _strip(full.db) == _strip(single)
+        # per-shard provenance is stamped on every merged record
+        origins = {r.meta["provenance"] for r in full.db.records()}
+        assert origins <= {f"fleet.shard0{i}.jsonl" for i in range(3)}
+        assert len(origins) == 3
+
+        # re-running a shard and re-syncing is a no-op (idempotence)
+        before = open(base, "rb").read()
+        fleet.run_shard(jobs, 3, 1, base, workers=1)
+        fleet.sync(base, 3)
+        assert open(base, "rb").read() == before
+
+        # snapshot serves the merged store verbatim
+        snap = str(tmp_path / "cache.json")
+        ScheduleCache.build(base, snap)
+        cache = ScheduleCache.load(snap)
+        assert cache.records() == full.db.records()
+
+
+class TestSyncEdgeCases:
+    def test_empty_shard_still_leaves_a_store(self, tmp_path):
+        """A shard whose slice of the matrix is empty must not look like a
+        crashed shard forever: run_shard touches the store file even when
+        there is nothing to do, so sync reports nothing skipped."""
+        jobs = orchestrator.jobs_for(["dense_256"], ["tpu_v5e"], limit=64)
+        base = str(tmp_path / "fleet.jsonl")
+        rep = fleet.run_fleet(jobs, 2, base, workers=1)  # 1 job, 2 shards
+        assert rep.ok and sorted(s.jobs for s in rep.shards) == [0, 1]
+        srep = fleet.sync(base, 2)
+        assert srep.skipped == [] and srep.keys == 1
+
+    def test_provenance_never_decides_a_tie(self, tmp_path):
+        """Score ties must resolve identically with and without provenance
+        stamping — the shard a record travelled through is bookkeeping,
+        not a tie-breaker — so `sync --verify` can't diverge on it."""
+        recs = [
+            ScheduleRecord(op="a[]", target="t0", config={"bm": 256},
+                           score=1.0, meta={"strategy": "es"}),
+            ScheduleRecord(op="a[]", target="t0", config={"bm": 64},
+                           score=1.0, meta={"strategy": "exhaustive"}),
+        ]
+        paths = []
+        for i, rec in enumerate(recs):
+            db = ScheduleDatabase(tmp_path / f"s{i}.jsonl")
+            db.add(rec)
+            paths.append(db.path)
+        winners = set()
+        for name, order, prov in [("ab", paths, True),
+                                  ("ba", paths[::-1], True),
+                                  ("np", paths, False)]:
+            db = ScheduleDatabase(tmp_path / f"{name}.jsonl")
+            db.merge_all(order, provenance=prov)
+            winners.add(json.dumps(db.best("a[]", "t0").config))
+        assert len(winners) == 1
+
+
+class TestScheduleCache:
+    def _populated_db(self, tmp_path):
+        db = ScheduleDatabase(tmp_path / "db.jsonl")
+        for op, target, version, score in [
+            ("matmul[K=256,M=256,N=256,dtype_bytes=2]", "tpu_v5e", "cm1", 2.0),
+            ("matmul[K=256,M=256,N=256,dtype_bytes=2]", "tpu_v5e", "cm1", 1.0),
+            ("matmul[K=512,M=512,N=512,dtype_bytes=2]", "cpu_avx2", "cm1", 3.0),
+            ("matmul[K=512,M=512,N=512,dtype_bytes=2]", "cpu_avx2",
+             "cm1-cal-deadbeef", 4.0),
+            ("flash[d=128,dtype_bytes=2,s=1024]", "tpu_v5e", "cm1", 5.0),
+        ]:
+            db.add(ScheduleRecord(op=op, target=target, version=version,
+                                  config={"bm": 128}, score=score,
+                                  meta={"strategy": "exhaustive"}))
+        return db
+
+    def test_snapshot_roundtrip_matches_live_db(self, tmp_path):
+        db = self._populated_db(tmp_path)
+        out = str(tmp_path / "cache.json")
+        built = ScheduleCache.build(db.path, out)
+        loaded = ScheduleCache.load(out)
+        assert len(loaded) == len(built) == len(db)
+        for rec in db.records():  # best() parity for every key
+            assert loaded.best(rec.op, rec.target, rec.version) == rec
+        for kw in ({}, {"op": "matmul"}, {"target": "cpu_avx2"},
+                   {"version": "cm1-cal-deadbeef"},
+                   {"op": "flash", "target": "tpu_v5e"}):
+            assert loaded.query(**kw) == db.query(**kw)
+        assert loaded.hits == len(db) and loaded.misses == 0
+        assert loaded.best("nope[]", "tpu_v5e") is None
+        assert loaded.misses == 1
+
+    def test_rebuilt_snapshot_reinstall_serves_new_records(self, tmp_path):
+        """Regression: the per-path snapshot instances in core.tuner must
+        revalidate by stat — re-tuning + rebuilding a snapshot at the same
+        path, then re-installing it, has to serve the *new* records (a
+        snapshot is immutable, so a stale cached instance never heals)."""
+        from repro.core import tuner
+
+        db = ScheduleDatabase(tmp_path / "db.jsonl")
+        op = "matmul[K=256,M=256,N=256,dtype_bytes=2]"
+        db.add(ScheduleRecord(op=op, target="tpu_v5e",
+                              config={"bm": 64}, score=2.0))
+        snap = str(tmp_path / "cache.json")
+        ScheduleCache.build(db.path, snap)
+        tuner.set_default_cache(snap)
+        assert tuner.get_default_cache().best(op, "tpu_v5e").config == \
+            {"bm": 64}
+
+        db.add(ScheduleRecord(op=op, target="tpu_v5e",
+                              config={"bm": 128}, score=1.0))  # re-tuned
+        ScheduleCache.build(db.path, snap)
+        tuner.set_default_cache(snap)
+        assert tuner.get_default_cache().best(op, "tpu_v5e").config == \
+            {"bm": 128}
+
+    def test_cache_is_immutable(self, tmp_path):
+        db = self._populated_db(tmp_path)
+        cache = ScheduleCache.from_db(db)
+        with pytest.raises(TypeError, match="immutable"):
+            cache.add(db.records()[0])
+
+    def test_corrupt_snapshot_rejected(self, tmp_path):
+        db = self._populated_db(tmp_path)
+        out = str(tmp_path / "cache.json")
+        ScheduleCache.build(db.path, out)
+        blob = open(out).read()
+        with open(out, "w") as f:  # flip a stored score: digest must catch it
+            f.write(blob.replace('"score": 5.0', '"score": 0.5'))
+        with pytest.raises(ValueError, match="digest mismatch"):
+            ScheduleCache.load(out)
+        with open(out, "w") as f:
+            f.write(json.dumps({"schema": "something-else", "records": []}))
+        with pytest.raises(ValueError, match="not a schedule snapshot"):
+            ScheduleCache.load(out)
+
+
+# -- cross-process stress (the inode-revalidation path in db.py) ----------
+
+def _stress_worker(path: str, wid: int, n: int) -> None:
+    """Interleave appends and compactions against a shared store."""
+    db = ScheduleDatabase(path)
+    for i in range(n):
+        db.add(ScheduleRecord(op=f"op{i % 5}[]", target=f"t{wid}",
+                              config={"i": i}, score=float(n - i)))
+        if i % 7 == 3:
+            db.compact()
+
+
+class TestCrossProcessStress:
+    def test_concurrent_add_and_compact(self, tmp_path):
+        """4 processes interleaving add+compact on one store: no torn
+        lines, no lost best records (exercises the fd-inode revalidation
+        in ``_append_locked``/``compact``)."""
+        path = str(tmp_path / "db.jsonl")
+        n = 30
+        ctx = multiprocessing.get_context("spawn")
+        procs = [ctx.Process(target=_stress_worker, args=(path, wid, n))
+                 for wid in range(4)]
+        for p in procs:
+            p.start()
+        for p in procs:
+            p.join(timeout=120)
+            assert p.exitcode == 0
+        db = ScheduleDatabase(path)
+        assert db.corrupt_lines == 0
+        for wid in range(4):
+            for k in range(5):
+                idxs = [i for i in range(n) if i % 5 == k]
+                best = db.best(f"op{k}[]", f"t{wid}")
+                assert best is not None, (wid, k)
+                assert best.score == float(n - max(idxs))
+
+
+# -- retry accounting (regression: attempts keyed by frozen TuneJob) ------
+
+_FLAKY_DIR_ENV = "REPRO_TEST_FLAKY_DIR"
+
+
+def _flaky_runner(job: TuneJob) -> ScheduleRecord:
+    """Fails the first two executions fleet-wide (cross-process markers),
+    then succeeds — a transient-infrastructure stand-in."""
+    d = os.environ[_FLAKY_DIR_ENV]
+    for i in range(2):
+        try:
+            fd = os.open(os.path.join(d, f"fail{i}"),
+                         os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            continue
+        os.close(fd)
+        raise RuntimeError(f"transient failure {i}")
+    return ScheduleRecord(op=f"flaky[{job.op}]", target=job.target,
+                          config={}, score=1.0)
+
+
+def _always_failing_runner(job: TuneJob) -> ScheduleRecord:
+    """Every execution drops a unique marker file, then fails — so the
+    total execution count is observable across processes."""
+    d = os.environ[_FLAKY_DIR_ENV]
+    for k in range(1000):
+        try:
+            fd = os.open(os.path.join(d, f"exec{k}"),
+                         os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            continue
+        os.close(fd)
+        raise RuntimeError(f"execution {k} failed")
+    raise AssertionError("marker space exhausted")
+
+
+class TestRetryAccounting:
+    def test_duplicate_jobs_do_not_share_retry_budget(self, tmp_path,
+                                                      monkeypatch):
+        """Two *identical* (frozen, equal) jobs must each get their own
+        full retry budget: 2 jobs × (1 + 2 retries) = 6 executions.
+        Keying attempts by the job value made duplicates share one counter
+        and exhaust each other's retries (4 executions, lost attempts)."""
+        monkeypatch.setenv(_FLAKY_DIR_ENV, str(tmp_path))
+        jobs = [TuneJob(op="dense_256"), TuneJob(op="dense_256")]
+        report = orchestrator.run(jobs, workers=2, retries=2,
+                                  runner=_always_failing_runner)
+        executions = [f for f in os.listdir(tmp_path)
+                      if f.startswith("exec")]
+        assert len(executions) == 6
+        assert len(report.failures) == 2
+        assert [f.attempts for f in report.failures] == [3, 3]
+
+    def test_inline_path_retries_each_duplicate(self, tmp_path, monkeypatch):
+        # inline runs jobs sequentially, so the first job eats both
+        # transient failures itself: it needs both of its extra attempts
+        monkeypatch.setenv(_FLAKY_DIR_ENV, str(tmp_path))
+        jobs = [TuneJob(op="dense_256"), TuneJob(op="dense_256")]
+        report = orchestrator.run(jobs, workers=1, retries=2,
+                                  runner=_flaky_runner)
+        assert report.ok and len(report.records) == 2

@@ -1,0 +1,97 @@
+"""Property-based tests: ``ScheduleDatabase`` merge is a semilattice join.
+
+Fleet sync only converges (any host, any merge order, any retry count →
+the same store) if absorbing records is governed by a *total* order:
+commutative, associative, idempotent. Hypothesis drives merge over record
+sets drawn from a deliberately tiny value pool so same-key conflicts —
+conflicting versions, conflicting scores, exact score ties with different
+configs — occur constantly.
+"""
+import os
+import tempfile
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.tuna.db import ScheduleDatabase, ScheduleRecord, record_beats  # noqa: E402
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+records = st.builds(
+    ScheduleRecord,
+    op=st.sampled_from(["a[]", "b[]", "c[]"]),
+    target=st.sampled_from(["t0", "t1"]),
+    version=st.sampled_from(["cm1", "cm1-cal-x"]),
+    config=st.fixed_dictionaries({"bm": st.sampled_from([64, 128, 256])}),
+    score=st.sampled_from([1.0, 2.0, 3.0]),  # small pool → frequent ties
+    evaluations=st.integers(min_value=0, max_value=3),
+    meta=st.fixed_dictionaries(
+        {"strategy": st.sampled_from(["es", "exhaustive"])}),
+)
+record_lists = st.lists(records, max_size=8)
+
+
+def _store(d: str, name: str, recs) -> str:
+    db = ScheduleDatabase(os.path.join(d, name))
+    open(db.path, "a").close()  # an empty shard store is still a store
+    for r in recs:
+        db.add(r)  # full history lands in the log, like a real shard store
+    return db.path
+
+
+def _merge(d: str, name: str, paths) -> ScheduleDatabase:
+    db = ScheduleDatabase(os.path.join(d, name))
+    open(db.path, "a").close()  # merged-but-empty stores are sources too
+    db.merge_all(paths, provenance=False)
+    return db
+
+
+def _bestset(db: ScheduleDatabase):
+    return frozenset(r.to_json() for r in db.records())
+
+
+class TestMergeAlgebra:
+    @SETTINGS
+    @given(record_lists, record_lists)
+    def test_commutative(self, xs, ys):
+        with tempfile.TemporaryDirectory() as d:
+            pa, pb = _store(d, "a", xs), _store(d, "b", ys)
+            ab = _merge(d, "ab", [pa, pb])
+            ba = _merge(d, "ba", [pb, pa])
+            assert _bestset(ab) == _bestset(ba)
+
+    @SETTINGS
+    @given(record_lists, record_lists, record_lists)
+    def test_associative(self, xs, ys, zs):
+        with tempfile.TemporaryDirectory() as d:
+            pa, pb, pc = (_store(d, "a", xs), _store(d, "b", ys),
+                          _store(d, "c", zs))
+            left = _merge(d, "l", [_merge(d, "ab", [pa, pb]).path, pc])
+            right = _merge(d, "r", [pa, _merge(d, "bc", [pb, pc]).path])
+            assert _bestset(left) == _bestset(right)
+
+    @SETTINGS
+    @given(record_lists)
+    def test_idempotent(self, xs):
+        with tempfile.TemporaryDirectory() as d:
+            pa = _store(d, "a", xs)
+            once = _merge(d, "m1", [pa])
+            twice = _merge(d, "m2", [pa, pa])
+            assert _bestset(once) == _bestset(twice)
+            # re-merging into an existing store absorbs nothing and leaves
+            # the log byte-identical
+            blob = open(once.path, "rb").read()
+            assert once.merge(pa, provenance=False) == 0
+            assert open(once.path, "rb").read() == blob
+
+    @SETTINGS
+    @given(records, records)
+    def test_record_order_is_total_and_antisymmetric(self, r1, r2):
+        if r1.key != r2.key:
+            return
+        if r1.to_json() == r2.to_json():
+            assert not record_beats(r1, r2) and not record_beats(r2, r1)
+        else:
+            assert record_beats(r1, r2) != record_beats(r2, r1)

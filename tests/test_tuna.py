@@ -129,6 +129,60 @@ class TestWarmCache:
         assert warm.config == cold.config
         assert warm.score == cold.score
 
+    def test_tune_zero_evaluations_from_snapshot_cache(self, tmp_path,
+                                                       monkeypatch):
+        """Acceptance: a warm hit served through ``ScheduleCache`` alone
+        (no DB installed at all) performs zero cost-model evaluations."""
+        from repro.tuna.cache import ScheduleCache
+
+        path = str(tmp_path / "db.jsonl")
+        space = MatmulSpace(1024, 1024, 1024, 2, target_kind="tpu")
+        cold = tuner.tune(space, TPU, db=path)
+        snap = str(tmp_path / "cache.json")
+        ScheduleCache.build(path, snap)
+
+        tuner.set_default_db(None)  # the snapshot serves on its own
+        tuner.set_default_cache(snap)
+
+        def boom(*a, **kw):
+            raise AssertionError("cost model evaluated despite snapshot")
+
+        monkeypatch.setattr(cost_model, "evaluate", boom)
+        warm = tuner.tune(MatmulSpace(1024, 1024, 1024, 2, "tpu"), TPU)
+        assert warm.from_db and warm.from_cache
+        assert warm.evaluations == 0
+        assert warm.config == cold.config and warm.score == cold.score
+        assert tuner.get_default_cache().hits >= 1
+        # and the snapshot never absorbs write-backs
+        with pytest.raises(TypeError):
+            tuner.get_default_cache().add(None)
+
+    def test_env_cache_pointing_at_unbuilt_snapshot_is_off(self, tmp_path,
+                                                           monkeypatch):
+        """$REPRO_TUNA_CACHE naming a snapshot that hasn't been built yet
+        must resolve to 'no cache', not crash every lookup."""
+        monkeypatch.setenv("REPRO_TUNA_CACHE",
+                           str(tmp_path / "not_built_yet.json"))
+        monkeypatch.setattr(tuner, "_DEFAULT_CACHE", tuner._UNSET)
+        assert tuner.get_default_cache() is None
+        res = tuner.tune(MatmulSpace(256, 256, 256, 2, "tpu"), TPU, db=False)
+        assert not res.from_db and res.evaluations > 0
+
+    def test_flash_blocks_served_from_snapshot_cache(self, tmp_path,
+                                                     monkeypatch):
+        from repro.kernels import ops
+        from repro.tuna.cache import ScheduleCache
+
+        db = ScheduleDatabase(tmp_path / "db.jsonl")
+        db.add(ScheduleRecord(
+            op="flash[d=128,dtype_bytes=2,s=2048]", target="tpu_v5e",
+            config={"block_q": 256, "block_k": 128}, score=1e-9))
+        snap = str(tmp_path / "cache.json")
+        ScheduleCache.build(db.path, snap)
+        ops.use_schedule_cache(snap)  # clears the memo, installs the cache
+        assert ops.tuned_flash_blocks(2048, 128) == (256, 128)
+        assert tuner.get_default_cache().hits >= 1
+
     def test_tuned_matmul_blocks_served_from_default_db(self, tmp_path,
                                                         monkeypatch):
         path = str(tmp_path / "db.jsonl")
