@@ -39,6 +39,8 @@ from repro.hw.target import HardwareTarget
 _UNSET = object()
 _DEFAULT_DB = _UNSET  # _UNSET = fall back to $REPRO_TUNA_DB; None = off
 _DEFAULT_CACHE = _UNSET  # _UNSET = fall back to $REPRO_TUNA_CACHE
+_DEFAULT_CACHE_PATH: Optional[str] = None  # where the default snapshot was
+#                                   installed from — what hot reload rechecks
 _PATH_DBS: Dict[str, object] = {}  # abspath -> ScheduleDatabase (one load
 #                                    per path per process, not per call)
 _PATH_CACHES: Dict[str, object] = {}  # abspath -> ScheduleCache snapshot
@@ -108,16 +110,20 @@ def _writable(store) -> bool:
 
 
 def _open_cache(path):
-    """Per-path snapshot instances, revalidated by stat: a snapshot is
-    immutable once loaded, so rebuilding the file (``os.replace`` → new
-    inode/mtime) must hand out a fresh instance, not the stale one."""
+    """Per-path snapshot instances, revalidated by the snapshot's *stored
+    content digest* (a cheap header read — no record parsing): a snapshot
+    is immutable once loaded, so a republished file must hand out a fresh
+    instance. stat-based stamps (mtime+size) are not enough — a transport
+    pull that preserves timestamps (rsync ``--times``, object-store
+    metadata) with an equal-size payload would serve the stale instance
+    forever. ``latest`` pointer files revalidate the same way: the pointer
+    header carries the target's sha1, so repointing changes the stamp."""
     key = os.path.abspath(os.fspath(path))
-    st = os.stat(key)
-    stamp = (st.st_mtime_ns, st.st_size)
-    cached = _PATH_CACHES.get(key)
-    if cached is None or cached[0] != stamp:
-        from repro.tuna.cache import ScheduleCache
+    from repro.tuna.cache import ScheduleCache, read_snapshot_header
 
+    stamp = read_snapshot_header(key).get("sha1")
+    cached = _PATH_CACHES.get(key)
+    if cached is None or stamp is None or cached[0] != stamp:
         _PATH_CACHES[key] = (stamp, ScheduleCache.load(key))
     return _PATH_CACHES[key][1]
 
@@ -126,10 +132,18 @@ def set_default_cache(cache) -> None:
     """Install the process-wide serving snapshot (path or ScheduleCache),
     consulted *before* the schedule DB on every read. ``None`` switches it
     OFF, including the ``$REPRO_TUNA_CACHE`` fallback. Clears the
-    block-spec memo caches so already-traced shapes re-resolve."""
-    global _DEFAULT_CACHE
+    block-spec memo caches so already-traced shapes re-resolve. Installing
+    a path remembers it, so ``refresh_default_cache`` can hot-swap when
+    the snapshot is republished. A missing, corrupt, or stale (wrong
+    ``COST_MODEL_VERSION``) snapshot raises — an explicit install must
+    never silently serve nothing."""
+    global _DEFAULT_CACHE, _DEFAULT_CACHE_PATH
     if isinstance(cache, (str, os.PathLike)):
-        cache = _open_cache(cache)
+        path = os.path.abspath(os.fspath(cache))
+        cache = _open_cache(path)
+        _DEFAULT_CACHE_PATH = path
+    else:
+        _DEFAULT_CACHE_PATH = None
     _DEFAULT_CACHE = cache
     _clear_memos()
 
@@ -138,15 +152,62 @@ def get_default_cache():
     """The installed snapshot, else one loaded from ``$REPRO_TUNA_CACHE``.
     An env-var path that does not exist yet (snapshot not built) resolves
     to OFF instead of failing every lookup — unlike ``set_default_cache``,
-    where an explicit install of a missing file raises."""
-    global _DEFAULT_CACHE
+    where an explicit install of a missing file raises. A *stale* env
+    snapshot (built under a different ``COST_MODEL_VERSION``) also
+    resolves to OFF, but loudly: a ``StaleSnapshotWarning`` says why every
+    lookup is about to pay a full search and how to rebuild. Either way
+    the path is remembered so ``refresh_default_cache`` picks up the
+    rebuilt snapshot without a restart."""
+    global _DEFAULT_CACHE, _DEFAULT_CACHE_PATH
     if _DEFAULT_CACHE is _UNSET:
         path = os.environ.get("REPRO_TUNA_CACHE")
-        try:
-            _DEFAULT_CACHE = _open_cache(path) if path else None
-        except FileNotFoundError:
+        if not path:
             _DEFAULT_CACHE = None
+        else:
+            from repro.tuna.cache import (StaleSnapshotError,
+                                          StaleSnapshotWarning)
+
+            _DEFAULT_CACHE_PATH = os.path.abspath(path)
+            try:
+                _DEFAULT_CACHE = _open_cache(path)
+            except FileNotFoundError:
+                _DEFAULT_CACHE = None  # not built yet; refresh may find it
+            except StaleSnapshotError as e:
+                import warnings
+
+                warnings.warn(f"$REPRO_TUNA_CACHE disabled: {e}",
+                              StaleSnapshotWarning, stacklevel=2)
+                _DEFAULT_CACHE = None
     return _DEFAULT_CACHE
+
+
+def refresh_default_cache() -> bool:
+    """Hot-reload the default serving snapshot if its content changed.
+
+    Long-running serve processes call this between waves: it re-reads the
+    snapshot header at the installed path (following a ``latest``
+    pointer), compares the stored sha1 against the instance being served,
+    and swaps in a fresh ``ScheduleCache`` — clearing the block-spec
+    memos — when a republish landed. Returns True iff a swap happened
+    (the new instance starts with zeroed hit/miss counters). While the
+    new file is missing, torn, mid-publish, or stale, the current
+    instance keeps serving — a failed poll never takes the cache away."""
+    global _DEFAULT_CACHE
+    cur = get_default_cache()  # resolves the env var on first use
+    path = _DEFAULT_CACHE_PATH
+    if path is None:
+        return False
+    try:
+        new = _open_cache(path)
+    except (OSError, ValueError):
+        # missing/unreadable file (NFS blips included) or a stale/corrupt
+        # snapshot (StaleSnapshotError is a ValueError): keep serving
+        return False
+    if new is cur:
+        return False
+    _DEFAULT_CACHE = new
+    _clear_memos()
+    return True
 
 
 def _lookup(op: str, target_name: str, version: str, db):

@@ -47,6 +47,13 @@ def use_schedule_cache(path) -> None:
     tuner.set_default_cache(path)  # clears all registered block-spec memos
 
 
+def refresh_schedule_cache() -> bool:
+    """Hot-swap the installed snapshot if it was republished (revalidated
+    by the snapshot's content digest, not file stat). Clears the block-spec
+    memos on swap so already-traced shapes re-resolve; True iff swapped."""
+    return tuner.refresh_default_cache()
+
+
 @functools.lru_cache(maxsize=256)
 def tuned_flash_blocks(
     s: int, d: int, dtype_bytes: int = 2, target_name: str = "tpu_v5e"

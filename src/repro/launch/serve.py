@@ -65,16 +65,24 @@ class ServeEngine:
 
 
 def serve(model: Model, params, requests: List[Request], slots: int,
-          cap: int) -> Dict:
+          cap: int, refresh=None) -> Dict:
+    """Serve ``requests`` in waves. ``refresh`` (nullary, returns True on
+    change) is polled *between* waves — the hook for schedule-snapshot hot
+    reload: a fleet republish lands in a long-running serve process at the
+    next wave boundary, no restart, and never mid-wave."""
     engine = ServeEngine(model, params, slots, cap)
+    reloads = 0
     t0 = time.perf_counter()
     for i in range(0, len(requests), slots):
+        if refresh is not None and i and refresh():
+            reloads += 1
         engine.run_wave(requests[i: i + slots])
     wall = time.perf_counter() - t0
     toks = sum(len(r.out) for r in requests)
     return {"wall_s": wall, "tokens": toks,
             "tok_per_s": toks / max(wall, 1e-9),
-            "engine_steps": engine.engine_steps}
+            "engine_steps": engine.engine_steps,
+            "cache_reloads": reloads}
 
 
 def main() -> None:
@@ -91,7 +99,12 @@ def main() -> None:
     ap.add_argument("--schedule-cache", default=None,
                     help="immutable schedule snapshot (python -m repro.tuna "
                          "snapshot); consulted before the DB — the lock-free "
-                         "serving hot path")
+                         "serving hot path. Accepts a versioned snapshot or "
+                         "a SnapshotManager `latest` pointer; polled between "
+                         "waves, so a republish lands without restart")
+    ap.add_argument("--no-schedule-refresh", action="store_true",
+                    help="do not poll the snapshot between waves (pin the "
+                         "instance loaded at startup)")
     args = ap.parse_args()
 
     if args.schedule_db:
@@ -115,15 +128,39 @@ def main() -> None:
         for i in range(args.requests)
     ]
     cap = args.prompt_len + args.max_new + 2
-    stats = serve(model, params, reqs, slots=args.slots, cap=cap)
+    # --schedule-cache or $REPRO_TUNA_CACHE both install a snapshot; either
+    # way the serve loop polls for republishes (a stale/unbuilt env
+    # snapshot resolves to OFF at startup and *heals* through the poll)
+    import os
+
+    cache_installed = bool(args.schedule_cache
+                           or os.environ.get("REPRO_TUNA_CACHE"))
+    refresh = None
+    if cache_installed and not args.no_schedule_refresh:
+        from repro.core import tuner
+
+        def refresh():
+            swapped = tuner.refresh_default_cache()
+            if swapped:
+                print("[serve] schedule snapshot republish observed — "
+                      "hot-reloaded (hit counters reset)")
+            return swapped
+
+    stats = serve(model, params, reqs, slots=args.slots, cap=cap,
+                  refresh=refresh)
     print(f"[serve] {stats['tokens']} tokens in {stats['wall_s']:.2f}s "
           f"({stats['tok_per_s']:.1f} tok/s, {stats['engine_steps']} engine steps)")
-    if args.schedule_cache:
+    if cache_installed:
         from repro.core import tuner
 
         cache = tuner.get_default_cache()
-        print(f"[serve] schedule cache: {cache.hits} hits / "
-              f"{cache.misses} misses ({len(cache)} records)")
+        if cache is None:
+            print("[serve] schedule cache: none installed (snapshot "
+                  "missing or stale; republish to hot-load it)")
+        else:
+            print(f"[serve] schedule cache: {cache.hits} hits / "
+                  f"{cache.misses} misses ({len(cache)} records, "
+                  f"{stats['cache_reloads']} hot reloads)")
 
 
 if __name__ == "__main__":

@@ -3,16 +3,43 @@
 The MITuna-style layer over the static tuner: ``db`` persists ``cm1``
 schedule records keyed by (op signature, target, cost-model version);
 ``orchestrator`` fans tuning jobs over a process pool; ``fleet`` shards the
-job matrix across hosts and reconciles per-shard stores; ``cache`` compiles
-the store into an immutable serving-time snapshot; ``cli`` drives all of it
-(``python -m repro.tuna``). ``core.tuner`` consults the snapshot and the DB
-transparently — see ``tuner.set_default_db`` / ``set_default_cache`` and
-the ``REPRO_TUNA_DB`` / ``REPRO_TUNA_CACHE`` env vars.
+job matrix across hosts and reconciles per-shard stores; ``transport``
+moves shard stores and snapshots between hosts over manifest-verified
+channels (no shared filesystem required); ``cache`` compiles the store
+into an immutable serving-time snapshot and manages its lifecycle
+(``SnapshotManager``: versioned names, a ``latest`` pointer, publish);
+``cli`` drives all of it (``python -m repro.tuna``). ``core.tuner``
+consults the snapshot and the DB transparently and hot-reloads republished
+snapshots via ``refresh_default_cache`` — see ``tuner.set_default_db`` /
+``set_default_cache`` and the ``REPRO_TUNA_DB`` / ``REPRO_TUNA_CACHE`` env
+vars.
 
-Only ``db`` and ``cache`` are imported eagerly (``orchestrator``/``fleet``
-pull in ``repro.core``; keeping this module light avoids an import cycle).
+Only ``db``, ``cache``, and ``transport`` are imported eagerly
+(``orchestrator``/``fleet`` pull in ``repro.core``; keeping this module
+light avoids an import cycle).
 """
-from repro.tuna.cache import ScheduleCache
+from repro.tuna.cache import (
+    ScheduleCache,
+    SnapshotManager,
+    StaleSnapshotError,
+)
 from repro.tuna.db import ScheduleDatabase, ScheduleRecord, SCHEMA
+from repro.tuna.transport import (
+    LocalDirTransport,
+    MemoryTransport,
+    Transport,
+    resolve_transport,
+)
 
-__all__ = ["ScheduleCache", "ScheduleDatabase", "ScheduleRecord", "SCHEMA"]
+__all__ = [
+    "LocalDirTransport",
+    "MemoryTransport",
+    "ScheduleCache",
+    "ScheduleDatabase",
+    "ScheduleRecord",
+    "SCHEMA",
+    "SnapshotManager",
+    "StaleSnapshotError",
+    "Transport",
+    "resolve_transport",
+]

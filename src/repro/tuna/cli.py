@@ -3,20 +3,32 @@
 Subcommands:
   tune     fan (ops × targets) jobs across a worker pool into the DB;
            --num-shards/--shard-id take one deterministic slice of the
-           matrix into a per-shard store (the fleet write path)
+           matrix into a per-shard store (the fleet write path);
+           --transport pushes the finished store into a channel
   sync     merge per-shard stores back into the base store (+ provenance);
-           --verify fails on any divergence from a reference store
-  snapshot compile the store into an immutable serving cache (JSON + sha1)
+           --transport pulls shard stores from a channel (verified) first;
+           --verify fails on any divergence from a reference store and on
+           any corrupt/torn source line dropped during the merge
+  snapshot compile the store into an immutable serving cache (JSON + sha1);
+           --dir keeps a versioned snapshot + `latest` pointer lifecycle;
+           --publish pushes the artifact over a transport
   query    print best records (filter by --op prefix / --target /
-           --version; --snapshot reads a compiled cache instead of the DB)
+           --version; --snapshot reads a compiled cache instead of the DB —
+           a stale-version snapshot is an error unless --allow-stale)
   compact  rewrite the log keeping only the best record per key
   export   dump best records as a JSON array
 
-Fleet workflow (each host owns a shard id; see repro.tuna.fleet):
-  python -m repro.tuna tune --db db.jsonl --num-shards 4 --shard-id 2
-  python -m repro.tuna sync --db db.jsonl --num-shards 4
-  python -m repro.tuna snapshot --db db.jsonl --out cache.json
-  python -m repro.tuna query --snapshot cache.json --op matmul
+Transports (see repro.tuna.transport): dir:///path (or a bare path) is a
+directory bucket; mem://name is the in-process test channel.
+
+Fleet workflow with no shared filesystem (each host owns a shard id):
+  python -m repro.tuna tune --db db.jsonl --num-shards 4 --shard-id 2 \
+      --transport dir:///var/tuna/bucket
+  python -m repro.tuna sync --db db.jsonl --num-shards 4 \
+      --transport dir:///var/tuna/bucket
+  python -m repro.tuna snapshot --db db.jsonl --dir snapshots/ \
+      --publish dir:///var/tuna/bucket
+  python -m repro.tuna query --snapshot snapshots/schedule_cache.latest.json
 
 Examples:
   python -m repro.tuna tune --ops dense_256,conv2d --targets tpu_v5e,cpu_avx2
@@ -92,6 +104,17 @@ def cmd_tune(args: argparse.Namespace) -> int:
     for fail in report.failures:
         print(f"[tuna] FAILED {fail.job.op} @ {fail.job.target} after "
               f"{fail.attempts} attempts:\n{fail.error}", file=sys.stderr)
+    if args.transport:
+        from repro.tuna import fleet
+        from repro.tuna.transport import resolve_transport
+
+        t = resolve_transport(args.transport)
+        # always push under the shard object name (shard 0 for an
+        # unsharded run): `sync --transport` only ever pulls shard names,
+        # so a base-named push would be unreachable
+        man = t.push(db_path, fleet.shard_object_name(args.db, args.shard_id))
+        print(f"[tuna] pushed {man.name} ({man.records} records, "
+              f"sha1 {man.sha1[:12]}) -> {t.describe()}")
     return 0 if report.ok else 1
 
 
@@ -100,12 +123,21 @@ def cmd_sync(args: argparse.Namespace) -> int:
 
     rep = fleet.sync(args.db, args.num_shards,
                      provenance=not args.no_provenance,
-                     compact=not args.no_compact)
+                     compact=not args.no_compact,
+                     transport=args.transport or None,
+                     staging_dir=args.staging_dir)
+    for name in rep.pulled:
+        print(f"[tuna] pulled {name} (verified)")
     for path, n in rep.absorbed.items():
         print(f"[tuna] {path}: absorbed {n} records")
     for path in rep.skipped:
         print(f"[tuna] missing shard store {path} (skipped; re-run sync "
               f"after the shard finishes)", file=sys.stderr)
+    if rep.corrupt_lines:
+        print(f"[tuna] WARNING: dropped {rep.corrupt_lines} corrupt/torn "
+              f"source line(s) during merge "
+              f"({ {p: n for p, n in rep.corrupt.items() if n} }); "
+              f"re-run sync once the shard writers finish", file=sys.stderr)
     print(f"[tuna] synced {args.db}: {rep.keys} keys from "
           f"{args.num_shards - len(rep.skipped)}/{args.num_shards} shards")
     if args.verify:
@@ -117,23 +149,57 @@ def cmd_sync(args: argparse.Namespace) -> int:
             for msg in div:
                 print(f"  {msg}", file=sys.stderr)
             return 1
+        if rep.corrupt_lines:
+            print("[tuna] --verify: corrupt source lines were dropped — "
+                  "the merge is not lossless, failing", file=sys.stderr)
+            return 1
         print(f"[tuna] verified against {args.verify}: no divergence")
     return 0
 
 
 def cmd_snapshot(args: argparse.Namespace) -> int:
-    from repro.tuna.cache import ScheduleCache
+    from repro.tuna.cache import ScheduleCache, SnapshotManager
 
+    if args.dir:
+        mgr = SnapshotManager(args.db, args.dir)
+        info = mgr.ensure(force=args.force)
+        state = "rebuilt" if info.rebuilt else "up to date"
+        print(f"[tuna] snapshot {info.path}: {info.count} records ({state}; "
+              f"latest -> {info.name})")
+        if args.publish:
+            from repro.tuna.transport import resolve_transport
+
+            t = resolve_transport(args.publish)
+            for man in mgr.publish(t, info=info):
+                print(f"[tuna] published {man.name} ({man.size}B, "
+                      f"sha1 {man.sha1[:12]}) -> {t.describe()}")
+        return 0
     cache = ScheduleCache.build(args.db, args.out)
     print(f"[tuna] snapshot {args.out}: {len(cache)} records from {args.db}")
+    if args.publish:
+        from repro.tuna.transport import resolve_transport
+
+        t = resolve_transport(args.publish)
+        man = t.push(args.out)
+        print(f"[tuna] published {man.name} ({man.records} records, "
+              f"sha1 {man.sha1[:12]}) -> {t.describe()}")
     return 0
 
 
 def cmd_query(args: argparse.Namespace) -> int:
     if args.snapshot:
-        from repro.tuna.cache import ScheduleCache
+        from repro.tuna.cache import ScheduleCache, StaleSnapshotError
 
-        store = ScheduleCache.load(args.snapshot)
+        try:
+            store = ScheduleCache.load(args.snapshot,
+                                       allow_stale=args.allow_stale)
+        except StaleSnapshotError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 1
+        if store.stale:
+            print(f"[tuna] WARNING: serving a stale snapshot (built for "
+                  f"cost-model version {store.cost_model_version!r})",
+                  file=sys.stderr)
     else:
         store = ScheduleDatabase(args.db)
     recs = store.query(op=args.op, target=args.target, version=args.version)
@@ -184,6 +250,10 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--shard-id", type=int, default=0,
                    help="which shard this host owns (writes to "
                         "<db>.shardNN.jsonl)")
+    p.add_argument("--transport", default=None, metavar="SPEC",
+                   help="push the finished store into this channel "
+                        "(dir:///path, mem://bucket, or a bare directory) "
+                        "so the sync host needs no shared filesystem")
     p.set_defaults(fn=cmd_tune)
 
     p = sub.add_parser("sync", help="merge per-shard stores into the base DB")
@@ -193,21 +263,43 @@ def build_parser() -> argparse.ArgumentParser:
                    help="do not stamp meta.provenance on absorbed records")
     p.add_argument("--no-compact", action="store_true",
                    help="keep the merged log uncompacted")
+    p.add_argument("--transport", default=None, metavar="SPEC",
+                   help="pull shard stores from this channel (integrity-"
+                        "verified) instead of the shared filesystem")
+    p.add_argument("--staging-dir", default=None,
+                   help="where transport pulls land (default "
+                        "<db>.staging/)")
     p.add_argument("--verify", default=None, metavar="REF_DB",
                    help="fail (exit 1) if the merged store diverges from "
-                        "this reference store")
+                        "this reference store, or if any corrupt source "
+                        "line was dropped")
     p.set_defaults(fn=cmd_sync)
 
     p = sub.add_parser("snapshot",
                        help="compile the store into a serving cache")
     p.add_argument("--db", default=DEFAULT_DB)
     p.add_argument("--out", default="experiments/schedule_cache.json")
+    p.add_argument("--dir", default=None, metavar="OUT_DIR",
+                   help="snapshot lifecycle mode: keep versioned snapshots "
+                        "(<prefix>.<cm-version>-<digest>.json) plus a "
+                        "`latest` pointer in this directory; rebuilds only "
+                        "when the store or cost-model version changed")
+    p.add_argument("--force", action="store_true",
+                   help="with --dir: rewrite the snapshot even if current")
+    p.add_argument("--publish", default=None, metavar="SPEC",
+                   help="push the snapshot (and, with --dir, the latest "
+                        "pointer) over this transport")
     p.set_defaults(fn=cmd_snapshot)
 
     p = sub.add_parser("query", help="print best records")
     p.add_argument("--db", default=DEFAULT_DB)
     p.add_argument("--snapshot", default=None,
-                   help="query a compiled snapshot instead of the JSONL DB")
+                   help="query a compiled snapshot (or a `latest` pointer) "
+                        "instead of the JSONL DB")
+    p.add_argument("--allow-stale", action="store_true",
+                   help="load a snapshot built under a different cost-model "
+                        "version anyway (flagged on stderr) instead of "
+                        "failing")
     p.add_argument("--op", default=None, help="exact op signature or prefix")
     p.add_argument("--target", default=None)
     p.add_argument("--version", default=None)

@@ -146,8 +146,16 @@ class ScheduleDatabase:
 
     # -- loading ---------------------------------------------------------
 
-    def _iter_file(self, path: str) -> Iterator[ScheduleRecord]:
+    def _iter_file(self, path: str, lock: bool = False,
+                   ) -> Iterator[ScheduleRecord]:
+        """Parse a store file. ``lock=True`` takes the cross-process flock
+        before reading: appends are single writes flushed under that lock,
+        so a locked read can never observe the torn tail of an in-flight
+        writer — without it a half-written final line silently counts as
+        corrupt and the record is dropped."""
         with open(path, "r", encoding="utf-8") as f:
+            if lock:
+                _flock(f)
             for line in f:
                 line = line.strip()
                 if not line:
@@ -182,11 +190,14 @@ class ScheduleDatabase:
                 self._append_locked(rec.to_json() + "\n")
         return improved
 
-    def _append_locked(self, line: str) -> None:
+    def _append_locked(self, line: str, max_retries: int = 50) -> None:
         """Append under the cross-process lock; if a concurrent ``compact``
         replaced the log while we waited (our fd then points at the orphaned
-        inode), reopen against the new file and retry."""
-        while True:
+        inode), reopen against the new file and retry. Retries are bounded:
+        a store path that *keeps* vanishing (the store directory deleted
+        mid-fleet, a job scrubbing the workdir) is an operational failure
+        that must surface, not an infinite busy-loop."""
+        for _ in range(max_retries):
             with open(self.path, "a", encoding="utf-8") as f:
                 _flock(f)
                 try:
@@ -197,8 +208,14 @@ class ScheduleDatabase:
                     continue
                 f.write(line)
                 return
+        raise RuntimeError(
+            f"{self.path}: gave up appending after {max_retries} attempts — "
+            f"the store file keeps vanishing or being replaced out from "
+            f"under the writer (was the store directory removed while the "
+            f"fleet is running?)")
 
-    def merge(self, other_path: str, provenance=None) -> int:
+    def merge(self, other_path: str, provenance=None,
+              lock_source: bool = True) -> int:
         """Absorb another store's records; persists only the improving ones
         (the log stays append-only, compaction prunes). Conflicts resolve by
         the total record order (cost-model version is part of the key; lower
@@ -206,11 +223,19 @@ class ScheduleDatabase:
         absorbed records with ``meta["provenance"] = <source basename>`` (a
         string label is used verbatim) so a merged store says which shard
         each winner came from. Returns how many records improved/extended
-        this store."""
+        this store.
+
+        The source is snapshotted under its cross-process flock (then the
+        lock is released before any write, so two hosts merging toward each
+        other cannot deadlock): a shard writer mid-append either finishes
+        its line before we read or hasn't started it — its record is merged
+        or deferred to the next sync, never torn and miscounted as corrupt.
+        Corrupt lines that *do* remain accumulate on ``corrupt_lines``;
+        ``sync`` reports the per-source delta."""
         if provenance is True:
             provenance = os.path.basename(os.fspath(other_path))
         absorbed = 0
-        for rec in self._iter_file(other_path):
+        for rec in list(self._iter_file(other_path, lock=lock_source)):
             if provenance:
                 rec = dataclasses.replace(
                     rec, meta={**rec.meta, "provenance": provenance})
@@ -219,23 +244,32 @@ class ScheduleDatabase:
                 absorbed += 1
         return absorbed
 
-    def merge_all(self, paths: Sequence[str], provenance=True) -> Dict[str, int]:
-        """Merge several shard stores; returns absorbed counts per path."""
-        return {os.fspath(p): self.merge(p, provenance=provenance)
-                for p in paths}
+    def merge_all(self, paths: Sequence[str], provenance=True,
+                  ) -> Tuple[Dict[str, int], Dict[str, int]]:
+        """Merge several shard stores; returns ``(absorbed counts,
+        corrupt-line counts)`` per path — a non-zero corrupt count means
+        lines were dropped and the merge is *not* lossless."""
+        stats: Dict[str, int] = {}
+        corrupt: Dict[str, int] = {}
+        for p in paths:
+            before = self.corrupt_lines
+            stats[os.fspath(p)] = self.merge(p, provenance=provenance)
+            corrupt[os.fspath(p)] = self.corrupt_lines - before
+        return stats, corrupt
 
     @classmethod
     def sync(cls, dst_path: str, shard_paths: Sequence[str],
              provenance=True, compact: bool = True,
-             ) -> Tuple["ScheduleDatabase", Dict[str, int]]:
+             ) -> Tuple["ScheduleDatabase", Dict[str, int], Dict[str, int]]:
         """Reconcile per-shard stores into ``dst_path`` (the fleet read side
         of ``repro.tuna.fleet``): open the base store, absorb every shard,
-        optionally compact. Returns ``(merged db, absorbed counts)``."""
+        optionally compact. Returns ``(merged db, absorbed counts,
+        corrupt-line counts per source)``."""
         db = cls(dst_path)
-        stats = db.merge_all(shard_paths, provenance=provenance)
+        stats, corrupt = db.merge_all(shard_paths, provenance=provenance)
         if compact:
             db.compact()
-        return db, stats
+        return db, stats, corrupt
 
     def _would_improve(self, rec: ScheduleRecord) -> bool:
         cur = self._best.get(rec.key)

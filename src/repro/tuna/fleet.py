@@ -14,14 +14,22 @@ score) and stamping per-shard provenance into ``meta``. A crashed shard
 simply stays missing until its host re-runs it — sync skips absent stores
 and reports them.
 
+Shard stores reach the sync host either over a shared filesystem (the
+default: ``sync`` globs ``<base>.shardNN.jsonl`` next to the base store)
+or over a ``repro.tuna.transport`` channel: ``run_shard(...,
+transport=...)`` pushes the finished shard store (manifest + sha1), and
+``sync(..., transport=...)`` pulls every shard the channel has into a
+staging directory with integrity verification before merging — no shared
+base directory between shard writers and the sync host.
+
 Workflow (also exposed by ``python -m repro.tuna``):
 
     jobs = orchestrator.jobs_for(ops, targets)     # the shared matrix
-    # on host i of N:
-    fleet.run_shard(jobs, N, i, base)              # -> base.shard0i.jsonl
-    # on any host, once shard stores are visible:
-    fleet.sync(base, N)                            # -> base (merged)
-    ScheduleCache.build(base, out)                 # -> serving snapshot
+    # on host i of N (no shared fs needed with a transport):
+    fleet.run_shard(jobs, N, i, base, transport=t) # tune + push
+    # on any host that can reach the channel:
+    fleet.sync(base, N, transport=t)               # pull + merge
+    SnapshotManager(base, out_dir).publish(t)      # versioned snapshot
 """
 from __future__ import annotations
 
@@ -80,6 +88,7 @@ class ShardRun:
     store_path: str
     jobs: int
     report: orchestrator.RunReport
+    pushed: Optional[object] = None  # transport Manifest when shipped
 
     @property
     def ok(self) -> bool:
@@ -111,25 +120,42 @@ def touch_store(path: str) -> str:
     return path
 
 
+def shard_object_name(base_path: str, shard_id: int) -> str:
+    """Host-independent transport object name for a shard store: the
+    basename of the shard store path, so pushing and pulling hosts only
+    have to agree on the base store *name*, never on directory layout."""
+    return os.path.basename(shard_store_path(base_path, shard_id))
+
+
 def run_shard(jobs: Sequence[TuneJob], num_shards: int, shard_id: int,
-              base_path: str, **run_kwargs) -> ShardRun:
+              base_path: str, transport=None, **run_kwargs) -> ShardRun:
     """Tune this shard's slice of the matrix into its own store (the
-    existing orchestrator does the work; extra kwargs pass through)."""
+    existing orchestrator does the work; extra kwargs pass through). With
+    a ``transport`` (spec or instance), the finished store is pushed —
+    manifest, sha1, record count — so the sync host needs no filesystem
+    view of this host at all."""
     mine = shard_jobs(jobs, num_shards, shard_id)
     store = ScheduleDatabase(touch_store(shard_store_path(base_path,
                                                           shard_id)))
     report = orchestrator.run(mine, db=store, **run_kwargs)
-    return ShardRun(shard_id, store.path, len(mine), report)
+    pushed = None
+    if transport is not None:
+        from repro.tuna.transport import resolve_transport
+
+        pushed = resolve_transport(transport).push(
+            store.path, shard_object_name(base_path, shard_id))
+    return ShardRun(shard_id, store.path, len(mine), report, pushed)
 
 
 def run_fleet(jobs: Sequence[TuneJob], num_shards: int, base_path: str,
-              shard_ids: Optional[Iterable[int]] = None,
+              shard_ids: Optional[Iterable[int]] = None, transport=None,
               **run_kwargs) -> FleetReport:
     """Run shards in one process (tests, single-host fleets); on a real
     fleet each host calls ``run_shard`` for the ids it owns."""
     ids = range(num_shards) if shard_ids is None else shard_ids
     return FleetReport([
-        run_shard(jobs, num_shards, sid, base_path, **run_kwargs)
+        run_shard(jobs, num_shards, sid, base_path, transport=transport,
+                  **run_kwargs)
         for sid in ids
     ])
 
@@ -143,23 +169,72 @@ class SyncReport:
     skipped: List[str]                # shard stores not found (crashed/late)
     keys: int                         # merged store size
     db: ScheduleDatabase = dataclasses.field(repr=False, default=None)
+    corrupt: Dict[str, int] = dataclasses.field(default_factory=dict)
+    pulled: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def corrupt_lines(self) -> int:
+        """Total source lines dropped as corrupt during the merge. Non-zero
+        means the sync was lossy: records existed that no store absorbed —
+        re-run sync after the writers finish, and treat it as a hard
+        failure under ``sync --verify``."""
+        return sum(self.corrupt.values())
 
 
 def sync(base_path: str, num_shards: int, provenance: bool = True,
-         compact: bool = True, missing_ok: bool = True) -> SyncReport:
+         compact: bool = True, missing_ok: bool = True,
+         transport=None, staging_dir: Optional[str] = None) -> SyncReport:
     """Merge every present shard store into the base store. Missing shard
     stores (a crashed or not-yet-finished host) are skipped and reported —
     re-running ``sync`` after the shard resumes completes the merge, and
     re-syncing an already-merged shard is a no-op (the total record order
-    makes absorption idempotent)."""
-    paths = [shard_store_path(base_path, i) for i in range(num_shards)]
-    present = [p for p in paths if os.path.exists(p)]
-    skipped = [p for p in paths if not os.path.exists(p)]
+    makes absorption idempotent).
+
+    With a ``transport`` (spec or instance), shard stores are *pulled*
+    from the channel into ``staging_dir`` (default ``<base>.staging/``)
+    with manifest/sha1 verification instead of being read off a shared
+    filesystem; shards not yet pushed are skipped exactly like missing
+    files. Sources are read under their cross-process flock either way,
+    and per-source corrupt-line counts are reported (see
+    ``SyncReport.corrupt_lines``)."""
+    base_path = os.fspath(base_path)
+    pulled: List[str] = []
+    if transport is not None:
+        from repro.tuna.transport import resolve_transport
+
+        from repro.tuna.transport import IntegrityError, TransportError
+
+        t = resolve_transport(transport)
+        staging = os.fspath(staging_dir) if staging_dir else \
+            base_path + ".staging"
+        present, skipped = [], []
+        for i in range(num_shards):
+            name = shard_object_name(base_path, i)
+            if not t.exists(name):
+                skipped.append(name)
+                continue
+            local = os.path.join(staging, name)
+            try:
+                t.pull(name, local)
+            except IntegrityError:
+                raise  # genuinely corrupt blob: never merge, never skip
+            except TransportError:
+                # raced a re-push between exists() and pull() (manifest
+                # retracted mid-window): the shard is "not pushed yet"
+                skipped.append(name)
+                continue
+            present.append(local)
+            pulled.append(name)
+    else:
+        paths = [shard_store_path(base_path, i) for i in range(num_shards)]
+        present = [p for p in paths if os.path.exists(p)]
+        skipped = [p for p in paths if not os.path.exists(p)]
     if skipped and not missing_ok:
         raise FileNotFoundError(f"missing shard stores: {skipped}")
-    db, stats = ScheduleDatabase.sync(base_path, present,
-                                      provenance=provenance, compact=compact)
-    return SyncReport(os.fspath(base_path), stats, skipped, len(db), db)
+    db, stats, corrupt = ScheduleDatabase.sync(
+        base_path, present, provenance=provenance, compact=compact)
+    return SyncReport(base_path, stats, skipped, len(db), db,
+                      corrupt=corrupt, pulled=pulled)
 
 
 def divergence(a, b, label_a: str = "a", label_b: str = "b") -> List[str]:

@@ -1,0 +1,574 @@
+"""Fleet transport + snapshot lifecycle: manifest-verified push/pull, the
+no-shared-filesystem fleet, merge-under-concurrent-append, stale-snapshot
+rejection, and hot reload of republished snapshots.
+
+The acceptance spine: a 2-shard fleet whose shard writers and sync host
+share *nothing but the transport channel* must reconcile to exactly the
+single-process store, and a long-running serve process must observe a
+republished snapshot without restart (the serve-loop half of that lives
+in tests/test_system.py; the tuner half is here).
+
+Like test_fleet.py, this module is imported by spawned worker processes
+(the locked-writer test), so it must stay jax-free.
+"""
+import json
+import multiprocessing
+import os
+import time
+
+import pytest
+
+from repro.core import tuner
+from repro.core.cost_model import COST_MODEL_VERSION
+from repro.tuna import cli, fleet, orchestrator
+from repro.tuna.cache import (
+    POINTER_SCHEMA,
+    ScheduleCache,
+    SnapshotManager,
+    StaleSnapshotError,
+    StaleSnapshotWarning,
+    read_snapshot_header,
+)
+from repro.tuna.db import ScheduleDatabase, ScheduleRecord
+from repro.tuna.transport import (
+    IntegrityError,
+    LocalDirTransport,
+    MemoryTransport,
+    TransportError,
+    resolve_transport,
+)
+
+JOB_OPS = ["dense_256", "dense_512", "batch_matmul"]
+JOB_TARGETS = ["tpu_v5e", "cpu_avx2"]
+
+
+def _matrix():
+    return orchestrator.jobs_for(JOB_OPS, JOB_TARGETS, limit=64)
+
+
+def _mem(tmp_path) -> MemoryTransport:
+    """A MemoryTransport on a bucket unique to this test invocation."""
+    bucket = f"test-{os.path.basename(tmp_path)}"
+    MemoryTransport.wipe(bucket)
+    return MemoryTransport(bucket)
+
+
+@pytest.fixture(params=["dir", "mem"])
+def transport(request, tmp_path):
+    if request.param == "dir":
+        return LocalDirTransport(str(tmp_path / "bucket"))
+    return _mem(tmp_path)
+
+
+def _store_with(tmp_path, name, records):
+    db = ScheduleDatabase(str(tmp_path / name))
+    for rec in records:
+        db.add(rec)
+    return db
+
+
+def _rec(op="a[]", target="t0", bm=64, score=1.0):
+    return ScheduleRecord(op=op, target=target, config={"bm": bm},
+                          score=score, meta={"strategy": "exhaustive"})
+
+
+class TestTransportProtocol:
+    def test_push_pull_roundtrip_verified(self, transport, tmp_path):
+        db = _store_with(tmp_path, "src.jsonl", [_rec(), _rec(op="b[]")])
+        man = transport.push(db.path, "fleet.shard00.jsonl")
+        assert man.records == 2 and man.size == os.path.getsize(db.path)
+        assert man.cost_model_version == COST_MODEL_VERSION
+        assert transport.exists("fleet.shard00.jsonl")
+        assert transport.list() == ["fleet.shard00.jsonl"]  # manifest hidden
+        assert transport.list_shards("fleet.jsonl") == ["fleet.shard00.jsonl"]
+
+        out = str(tmp_path / "pulled" / "fleet.shard00.jsonl")
+        got = transport.pull("fleet.shard00.jsonl", out)
+        assert got == man
+        assert open(out, "rb").read() == open(db.path, "rb").read()
+
+    def test_pull_of_corrupt_blob_fails_loudly(self, transport, tmp_path):
+        db = _store_with(tmp_path, "src.jsonl", [_rec()])
+        transport.push(db.path, "x.jsonl")
+        transport._put("x.jsonl", b'{"torn": ')  # bitrot / torn copy
+        with pytest.raises(IntegrityError, match="torn or corrupt"):
+            transport.pull("x.jsonl", str(tmp_path / "out.jsonl"))
+        assert not os.path.exists(tmp_path / "out.jsonl")  # nothing landed
+
+    def test_missing_object_and_manifest(self, transport, tmp_path):
+        with pytest.raises(TransportError, match="no object"):
+            transport.pull("nope.jsonl", str(tmp_path / "out"))
+        transport._put("bare.jsonl", b"{}\n")  # pushed out-of-band: no manifest
+        with pytest.raises(TransportError, match="no manifest"):
+            transport.pull("bare.jsonl", str(tmp_path / "out"))
+
+    def test_mid_push_blob_is_not_yet_visible(self, transport, tmp_path):
+        """The manifest is pushed last and acts as the commit marker: a
+        sync racing a mid-push shard must see 'not pushed yet' (skip),
+        never pull a payload whose manifest hasn't landed."""
+        transport._put("f.shard00.jsonl", b'{"op": "a[]"}\n')  # payload only
+        assert not transport.exists("f.shard00.jsonl")
+        rep = fleet.sync(str(tmp_path / "sync" / "f.jsonl"), 1,
+                         transport=transport)
+        assert rep.skipped == ["f.shard00.jsonl"] and rep.pulled == []
+
+    def test_repush_replaces_payload_and_manifest_coherently(
+            self, transport, tmp_path):
+        """A crashed shard host re-running `tune --transport` re-pushes its
+        store: the pull side must get the new payload verified against the
+        new manifest, never a fresh-payload/stale-manifest pair."""
+        db = _store_with(tmp_path, "src.jsonl", [_rec()])
+        first = transport.push(db.path, "f.shard00.jsonl")
+        db.add(_rec(op="more[]", bm=256, score=0.5))
+        second = transport.push(db.path, "f.shard00.jsonl")
+        assert second.sha1 != first.sha1 and second.records == 2
+        out = str(tmp_path / "out.jsonl")
+        assert transport.pull("f.shard00.jsonl", out) == second
+        assert open(out, "rb").read() == open(db.path, "rb").read()
+
+    def test_memory_buckets_shared_by_name_isolated_by_bucket(self, tmp_path):
+        a1, a2 = MemoryTransport("bkt-a"), MemoryTransport("bkt-a")
+        b = MemoryTransport("bkt-b")
+        try:
+            db = _store_with(tmp_path, "s.jsonl", [_rec()])
+            a1.push(db.path, "s.jsonl")
+            assert a2.exists("s.jsonl")  # same channel, different "host"
+            assert not b.exists("s.jsonl")
+        finally:
+            MemoryTransport.wipe("bkt-a")
+            MemoryTransport.wipe("bkt-b")
+
+    def test_resolve_transport_specs(self, tmp_path):
+        t = resolve_transport(f"dir://{tmp_path}/bucket")
+        assert isinstance(t, LocalDirTransport)
+        assert resolve_transport(str(tmp_path)).root == str(tmp_path)
+        m = resolve_transport("mem://spec-test")
+        assert isinstance(m, MemoryTransport) and m.bucket == "spec-test"
+        assert resolve_transport(m) is m
+        with pytest.raises(ValueError):
+            resolve_transport("")
+
+    def test_dir_transport_rejects_escaping_names(self, tmp_path):
+        t = LocalDirTransport(str(tmp_path / "bucket"))
+        with pytest.raises(TransportError, match="escapes"):
+            t._put("../outside.jsonl", b"x")
+
+
+class _RepushRacingTransport(MemoryTransport):
+    """Retracts the manifest between the caller's exists() and pull() —
+    what a concurrent re-push's commit window looks like to a sync."""
+
+    def pull(self, name, local_path):
+        self._delete(name + ".manifest")
+        return super().pull(name, local_path)
+
+
+class TestFleetOverTransport:
+    def test_sync_skips_shard_repushed_mid_window(self, tmp_path):
+        """sync racing a shard re-push treats the shard as not-pushed-yet
+        (skipped, merged on the next sync) instead of aborting the whole
+        merge — but a genuinely corrupt blob still fails loudly."""
+        bucket = f"race-{os.path.basename(tmp_path)}"
+        MemoryTransport.wipe(bucket)
+        db = _store_with(tmp_path, "src.jsonl", [_rec()])
+        _RepushRacingTransport(bucket).push(db.path, "f.shard00.jsonl")
+        rep = fleet.sync(str(tmp_path / "sync" / "f.jsonl"), 1,
+                         transport=_RepushRacingTransport(bucket))
+        assert rep.skipped == ["f.shard00.jsonl"] and rep.pulled == []
+
+        clean = MemoryTransport(bucket)
+        clean.push(db.path, "f.shard00.jsonl")
+        clean._put("f.shard00.jsonl", b"bitrot")  # manifest now lies
+        with pytest.raises(IntegrityError):
+            fleet.sync(str(tmp_path / "sync2" / "f.jsonl"), 1,
+                       transport=clean)
+        MemoryTransport.wipe(bucket)
+
+    def test_unsharded_tune_push_is_reachable_by_sync(self, tmp_path,
+                                                      capsys):
+        """`tune --transport` without sharding must push under the shard-0
+        object name — `sync --transport` only ever pulls shard names, so a
+        base-named push would be silently unreachable."""
+        bucket = f"mem://cli-{os.path.basename(tmp_path)}"
+        MemoryTransport.wipe(bucket[len("mem://"):])
+        db = str(tmp_path / "host" / "db.jsonl")
+        rc = cli.main(["tune", "--smoke", "--workers", "1", "--db", db,
+                       "--transport", bucket])
+        assert rc == 0
+        assert "pushed db.shard00.jsonl" in capsys.readouterr().out
+        rep = fleet.sync(str(tmp_path / "sync" / "db.jsonl"), 1,
+                         transport=bucket)
+        assert rep.pulled == ["db.shard00.jsonl"] and rep.skipped == []
+        assert rep.keys == len(ScheduleDatabase(db))
+
+    def test_two_shard_fleet_no_shared_fs_matches_single_run(self, tmp_path):
+        """Acceptance: shard hosts and the sync host share nothing but the
+        channel. Late shards are skipped and a re-sync completes; the
+        merged store is record-for-record identical to both a
+        single-process run and a shared-filesystem fleet sync."""
+        jobs = _matrix()
+        single = ScheduleDatabase(str(tmp_path / "single.jsonl"))
+        assert orchestrator.run(jobs, db=single, workers=1).ok
+
+        t = _mem(tmp_path)
+        # every host uses a private directory — no shared base path
+        a = fleet.run_shard(jobs, 2, 0, str(tmp_path / "hostA" / "f.jsonl"),
+                            transport=t, workers=1)
+        assert a.ok and a.pushed is not None
+        assert a.pushed.name == "f.shard00.jsonl"
+
+        # shard 1 hasn't pushed yet: sync sees it as missing, not an error
+        sync_base = str(tmp_path / "hostC" / "f.jsonl")
+        partial = fleet.sync(sync_base, 2, transport=t)
+        assert partial.skipped == ["f.shard01.jsonl"]
+        assert partial.pulled == ["f.shard00.jsonl"]
+        assert 0 < partial.keys < len(single)
+
+        b = fleet.run_shard(jobs, 2, 1, str(tmp_path / "hostB" / "f.jsonl"),
+                            transport=t, workers=1)
+        assert b.ok and b.pushed.name == "f.shard01.jsonl"
+        full = fleet.sync(sync_base, 2, transport=t)
+        assert full.skipped == [] and full.corrupt_lines == 0
+        assert fleet.divergence(full.db, single, "fleet", "single") == []
+
+        # record-for-record parity with the shared-fs flow, provenance
+        # stamps included (staged pulls keep the shard store basename)
+        shared_base = str(tmp_path / "sharedfs" / "f.jsonl")
+        fleet.run_fleet(jobs, 2, shared_base, workers=1)
+        shared = fleet.sync(shared_base, 2)
+        assert full.db.records() == shared.db.records()
+
+        # re-sync over the channel is idempotent
+        again = fleet.sync(sync_base, 2, transport=t)
+        assert again.db.records() == full.db.records()
+
+
+# -- merge under concurrent append (the flock + corrupt-line fixes) --------
+
+def _locked_slow_writer(path: str, line: str, hold_seconds: float) -> None:
+    """Acquire the store flock, expose a torn prefix, then finish the line
+    and release — what an in-flight shard writer looks like mid-append."""
+    import fcntl
+
+    fd = os.open(path, os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644)
+    fcntl.flock(fd, fcntl.LOCK_EX)
+    half = len(line) // 2
+    os.write(fd, line[:half].encode())
+    with open(path + ".lock-held", "w"):
+        pass  # signal the parent that the torn state is on disk
+    time.sleep(hold_seconds)
+    os.write(fd, line[half:].encode())
+    os.close(fd)  # releases the flock
+
+
+class TestMergeUnderConcurrentAppend:
+    def test_locked_merge_waits_for_inflight_writer(self, tmp_path):
+        """sync must not count a still-being-written final line as corrupt:
+        the source flock makes merge wait out the writer, so the record is
+        kept — previously it was silently dropped while sync reported
+        success."""
+        pytest.importorskip("fcntl")
+        base = str(tmp_path / "f.jsonl")
+        shard = fleet.shard_store_path(base, 0)
+        keep = _rec(op="keep[]", bm=128, score=0.5)
+        ScheduleDatabase(shard).add(_rec(op="first[]"))
+
+        ctx = multiprocessing.get_context("spawn")
+        proc = ctx.Process(target=_locked_slow_writer,
+                           args=(shard, keep.to_json() + "\n", 1.0))
+        proc.start()
+        try:
+            deadline = time.monotonic() + 20
+            while not os.path.exists(shard + ".lock-held"):
+                assert time.monotonic() < deadline, "writer never locked"
+                time.sleep(0.01)
+            rep = fleet.sync(base, 1)  # blocks on the source flock
+        finally:
+            proc.join(timeout=30)
+        assert proc.exitcode == 0
+        assert rep.corrupt_lines == 0
+        assert rep.db.best("keep[]", "t0").config == {"bm": 128}
+
+    def test_torn_line_reported_then_recovered_by_resync(self, tmp_path):
+        """A genuinely torn line (writer crashed mid-append) is dropped but
+        *reported* — and once the shard host re-runs and completes the
+        record, re-sync absorbs it."""
+        base = str(tmp_path / "f.jsonl")
+        shard = fleet.shard_store_path(base, 0)
+        good, torn = _rec(op="good[]"), _rec(op="late[]", bm=256, score=0.25)
+        with open(shard, "w") as f:
+            f.write(good.to_json() + "\n")
+            f.write(torn.to_json()[: 20])  # crash mid-write, no newline
+        rep = fleet.sync(base, 1)
+        assert rep.corrupt_lines == 1
+        assert rep.corrupt[shard] == 1
+        assert rep.db.best("late[]", "t0") is None
+
+        with open(shard, "w") as f:  # the shard host re-runs its slice
+            f.write(good.to_json() + "\n")
+            f.write(torn.to_json() + "\n")
+        rep2 = fleet.sync(base, 1)
+        assert rep2.corrupt_lines == 0
+        assert rep2.db.best("late[]", "t0").config == {"bm": 256}
+
+    def test_cli_verify_fails_on_corrupt_lines(self, tmp_path, capsys):
+        """`sync --verify` promises a lossless, divergence-free merge: a
+        dropped corrupt line must fail it even when the best-record sets
+        happen to match the reference."""
+        ref = _store_with(tmp_path, "ref.jsonl", [_rec(op="good[]")])
+        base = str(tmp_path / "f.jsonl")
+        with open(fleet.shard_store_path(base, 0), "w") as f:
+            f.write(_rec(op="good[]").to_json() + "\n")
+            f.write('{"op": "torn')
+        rc = cli.main(["sync", "--db", base, "--num-shards", "1",
+                       "--verify", ref.path])
+        err = capsys.readouterr().err
+        assert rc == 1
+        assert "corrupt" in err and "not lossless" in err
+
+
+class TestAppendRetryCap:
+    def test_vanishing_store_path_surfaces_instead_of_spinning(
+            self, tmp_path, monkeypatch):
+        db = ScheduleDatabase(str(tmp_path / "db.jsonl"))
+        db.add(_rec())
+        real_stat = os.stat
+
+        def vanishing_stat(path, *args, **kwargs):
+            if os.fspath(path) == db.path:
+                raise FileNotFoundError(path)
+            return real_stat(path, *args, **kwargs)
+
+        monkeypatch.setattr(os, "stat", vanishing_stat)
+        with pytest.raises(RuntimeError, match="keeps vanishing"):
+            db.add(_rec(op="b[]"))
+
+
+# -- stale snapshots (COST_MODEL_VERSION lifecycle) ------------------------
+
+def _make_stale(snap_path: str, out_path: str, version: str = "cm0") -> str:
+    """Rewrite a snapshot as if built under another cost-model version
+    (the digest covers records only, so the file stays well-formed)."""
+    with open(snap_path) as f:
+        obj = json.load(f)
+    obj["cost_model_version"] = version
+    with open(out_path, "w") as f:
+        json.dump(obj, f)
+    return out_path
+
+
+class TestStaleSnapshot:
+    def _snapshot(self, tmp_path):
+        db = _store_with(tmp_path, "db.jsonl", [_rec(op="m[]", bm=128)])
+        snap = str(tmp_path / "cache.json")
+        ScheduleCache.build(db.path, snap)
+        return snap
+
+    def test_load_rejects_version_mismatch(self, tmp_path):
+        stale = _make_stale(self._snapshot(tmp_path),
+                            str(tmp_path / "stale.json"))
+        with pytest.raises(StaleSnapshotError) as ei:
+            ScheduleCache.load(stale)
+        msg = str(ei.value)
+        assert "cm0" in msg and COST_MODEL_VERSION in msg
+        assert "repro.tuna snapshot" in msg  # actionable: says how to fix
+
+    def test_allow_stale_warns_and_flags(self, tmp_path):
+        stale = _make_stale(self._snapshot(tmp_path),
+                            str(tmp_path / "stale.json"))
+        with pytest.warns(StaleSnapshotWarning):
+            cache = ScheduleCache.load(stale, allow_stale=True)
+        assert cache.stale and cache.cost_model_version == "cm0"
+        assert len(cache) == 1  # records are there, keys just won't match
+
+    def test_set_default_cache_refuses_stale_install(self, tmp_path):
+        stale = _make_stale(self._snapshot(tmp_path),
+                            str(tmp_path / "stale.json"))
+        with pytest.raises(StaleSnapshotError):
+            tuner.set_default_cache(stale)
+        assert tuner.get_default_cache() is None  # nothing half-installed
+
+    def test_env_cache_stale_flags_then_heals_on_republish(
+            self, tmp_path, monkeypatch):
+        """$REPRO_TUNA_CACHE at a stale snapshot resolves to OFF with a
+        warning (not a crash, not silent misses) — and once the snapshot
+        is rebuilt in place, refresh_default_cache picks it up without a
+        process restart."""
+        snap = self._snapshot(tmp_path)
+        stale_at_same_path = str(tmp_path / "served.json")
+        _make_stale(snap, stale_at_same_path)
+        monkeypatch.setenv("REPRO_TUNA_CACHE", stale_at_same_path)
+        monkeypatch.setattr(tuner, "_DEFAULT_CACHE", tuner._UNSET)
+        monkeypatch.setattr(tuner, "_DEFAULT_CACHE_PATH", None)
+        with pytest.warns(StaleSnapshotWarning, match="REPRO_TUNA_CACHE"):
+            assert tuner.get_default_cache() is None
+
+        db = ScheduleDatabase(str(tmp_path / "db.jsonl"))
+        ScheduleCache.build(db.path, stale_at_same_path)  # rebuilt, current
+        assert tuner.refresh_default_cache() is True
+        assert tuner.get_default_cache().best("m[]", "t0") is not None
+
+    def test_cli_query_stale_fails_with_actionable_message(
+            self, tmp_path, capsys):
+        stale = _make_stale(self._snapshot(tmp_path),
+                            str(tmp_path / "stale.json"))
+        rc = cli.main(["query", "--snapshot", stale, "--op", "m"])
+        err = capsys.readouterr().err
+        assert rc == 1
+        assert "cm0" in err and "Rebuild" in err
+
+    def test_cli_query_allow_stale_serves_and_warns(self, tmp_path, capsys):
+        stale = _make_stale(self._snapshot(tmp_path),
+                            str(tmp_path / "stale.json"))
+        with pytest.warns(StaleSnapshotWarning):
+            rc = cli.main(["query", "--snapshot", stale, "--op", "m",
+                           "--allow-stale"])
+        out = capsys.readouterr()
+        assert rc == 0
+        assert "m[]" in out.out and "WARNING" in out.err
+
+
+# -- snapshot identity revalidation (hot reload correctness) ---------------
+
+class TestContentDigestRevalidation:
+    def test_preserved_mtime_and_size_still_reloads(self, tmp_path):
+        """The old (mtime_ns, size) stamp is blind to a transport pull that
+        preserves timestamps with an equal-size payload; the stored-sha1
+        stamp is not."""
+        db_a = _store_with(tmp_path, "db_a.jsonl", [_rec(op="m[]", bm=128,
+                                                         score=1.0)])
+        db_b = _store_with(tmp_path, "db_b.jsonl", [_rec(op="m[]", bm=256,
+                                                         score=2.0)])
+        snap = str(tmp_path / "cache.json")
+        ScheduleCache.build(db_a.path, snap)
+        st = os.stat(snap)
+        tuner.set_default_cache(snap)
+        assert tuner.get_default_cache().best("m[]", "t0").config == \
+            {"bm": 128}
+
+        ScheduleCache.build(db_b.path, snap)  # rsync --times equivalent:
+        os.utime(snap, ns=(st.st_atime_ns, st.st_mtime_ns))
+        now = os.stat(snap)
+        assert (now.st_mtime_ns, now.st_size) == (st.st_mtime_ns, st.st_size)
+
+        assert tuner.refresh_default_cache() is True
+        cache = tuner.get_default_cache()
+        assert cache.best("m[]", "t0").config == {"bm": 256}
+        assert cache.hits == 1  # fresh instance: counters reset on swap
+
+    def test_refresh_is_noop_without_change(self, tmp_path):
+        snap = str(tmp_path / "cache.json")
+        ScheduleCache.build(_store_with(tmp_path, "db.jsonl",
+                                        [_rec()]).path, snap)
+        tuner.set_default_cache(snap)
+        first = tuner.get_default_cache()
+        assert tuner.refresh_default_cache() is False
+        assert tuner.get_default_cache() is first
+
+    def test_refresh_survives_vanished_snapshot(self, tmp_path):
+        snap = str(tmp_path / "cache.json")
+        ScheduleCache.build(_store_with(tmp_path, "db.jsonl",
+                                        [_rec()]).path, snap)
+        tuner.set_default_cache(snap)
+        first = tuner.get_default_cache()
+        os.unlink(snap)  # mid-publish window
+        assert tuner.refresh_default_cache() is False
+        assert tuner.get_default_cache() is first  # keeps serving
+
+    def test_header_probe_matches_full_parse(self, tmp_path):
+        snap = str(tmp_path / "cache.json")
+        built = ScheduleCache.build(
+            _store_with(tmp_path, "db.jsonl",
+                        [_rec(op=f"op{i}[]") for i in range(40)]).path, snap)
+        hdr = read_snapshot_header(snap)
+        assert hdr["sha1"] == built.payload_sha1()
+        assert hdr["count"] == 40
+        assert hdr["cost_model_version"] == COST_MODEL_VERSION
+
+
+# -- SnapshotManager lifecycle ---------------------------------------------
+
+class TestSnapshotManager:
+    def test_ensure_is_content_addressed_and_idempotent(self, tmp_path):
+        db = _store_with(tmp_path, "db.jsonl", [_rec(op="m[]")])
+        mgr = SnapshotManager(db.path, str(tmp_path / "snaps"))
+        info = mgr.ensure()
+        assert info.rebuilt and info.repointed
+        assert COST_MODEL_VERSION in info.name and info.sha1[:12] in info.name
+        assert read_snapshot_header(mgr.latest_path)["snapshot"] == info.name
+
+        again = mgr.ensure()  # cron-safe: nothing changed, nothing happens
+        assert not again.rebuilt and not again.repointed
+        assert again.name == info.name
+
+        db.add(_rec(op="n[]", bm=256, score=0.5))
+        moved = mgr.ensure()
+        assert moved.rebuilt and moved.repointed and moved.name != info.name
+        assert os.path.exists(info.path)  # old artifact left for late pulls
+
+    def test_cost_model_bump_retires_the_snapshot_name(self, tmp_path,
+                                                       monkeypatch):
+        db = _store_with(tmp_path, "db.jsonl", [_rec(op="m[]")])
+        mgr = SnapshotManager(db.path, str(tmp_path / "snaps"))
+        old = mgr.ensure()
+        monkeypatch.setattr("repro.tuna.cache.COST_MODEL_VERSION", "cm2")
+        bumped = mgr.ensure()
+        assert bumped.rebuilt and bumped.repointed
+        assert ".cm2-" in bumped.name and bumped.name != old.name
+        assert read_snapshot_header(mgr.latest_path)[
+            "cost_model_version"] == "cm2"
+
+    def test_load_follows_latest_pointer(self, tmp_path):
+        db = _store_with(tmp_path, "db.jsonl", [_rec(op="m[]", bm=128)])
+        mgr = SnapshotManager(db.path, str(tmp_path / "snaps"))
+        mgr.ensure()
+        cache = ScheduleCache.load(mgr.latest_path)
+        assert cache.best("m[]", "t0").config == {"bm": 128}
+        hdr = read_snapshot_header(mgr.latest_path)
+        assert hdr["schema"] == POINTER_SCHEMA
+
+    def test_hot_reload_through_latest_pointer(self, tmp_path):
+        """The serving contract: point at `latest` once, republish forever.
+        The pointer header carries the target sha1, so a repoint is a stamp
+        change even though the pointer path never changes."""
+        db = _store_with(tmp_path, "db.jsonl", [_rec(op="m[]", bm=128)])
+        mgr = SnapshotManager(db.path, str(tmp_path / "snaps"))
+        mgr.ensure()
+        tuner.set_default_cache(mgr.latest_path)
+        assert tuner.get_default_cache().best("m[]", "t0").config == \
+            {"bm": 128}
+        assert tuner.refresh_default_cache() is False
+
+        db.add(_rec(op="m[]", bm=512, score=0.1))  # re-tuned: better record
+        mgr.ensure()
+        assert tuner.refresh_default_cache() is True
+        assert tuner.get_default_cache().best("m[]", "t0").config == \
+            {"bm": 512}
+
+    def test_publish_reuses_ensure_info(self, tmp_path, monkeypatch):
+        db = _store_with(tmp_path, "db.jsonl", [_rec(op="m[]")])
+        mgr = SnapshotManager(db.path, str(tmp_path / "snaps"))
+        info = mgr.ensure()
+        monkeypatch.setattr(mgr, "ensure",
+                            lambda *a, **k: pytest.fail("rebuilt twice"))
+        manifests = mgr.publish(_mem(tmp_path), info=info)
+        assert manifests[0].name == info.name
+
+    def test_publish_roundtrip_serves_identically(self, tmp_path):
+        db = _store_with(tmp_path, "db.jsonl",
+                         [_rec(op="m[]"), _rec(op="n[]", bm=256)])
+        mgr = SnapshotManager(db.path, str(tmp_path / "snaps"))
+        t = _mem(tmp_path)
+        manifests = mgr.publish(t)
+        assert [m.name for m in manifests] == \
+            [mgr.ensure().name, "schedule_cache.latest.json"]
+
+        # "serving host": pull pointer + snapshot, nothing else shared
+        host = tmp_path / "servehost"
+        t.pull("schedule_cache.latest.json",
+               str(host / "schedule_cache.latest.json"))
+        target = read_snapshot_header(
+            str(host / "schedule_cache.latest.json"))["snapshot"]
+        t.pull(target, str(host / target))
+        cache = ScheduleCache.load(str(host / "schedule_cache.latest.json"))
+        assert cache.records() == ScheduleCache.from_db(db).records()
