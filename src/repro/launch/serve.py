@@ -1,11 +1,21 @@
-"""Batched serving driver (wave scheduling).
+"""Batched serving driver: continuous batching (default) or wave fallback.
 
-Requests are served in waves of ``slots``: each wave is prefilled *batched*
-(the prefill path the dry-run lowers at 32k), then decoded in lockstep with
-``serve_step`` — one token per engine step for every slot. The cache pytree
-and shardings are identical to the dry-run's decode cells, so the engine is
-the production step under a scheduler. (Per-slot continuous refill needs
-per-slot position vectors — noted as an extension in DESIGN.md.)
+Requests flow through one of two schedulers (design notes: README
+"Serving" section — slot lifecycle, per-slot positions, refill
+invariants):
+
+* ``continuous`` (default) — ``launch/engine.py``: per-slot position
+  vectors, an admission queue with per-request deadlines, and slot refill
+  the moment a request finishes (EOS / ``max_new`` / deadline). Schedule
+  snapshots hot-reload at admission boundaries.
+* ``wave`` (fallback, for parity comparison) — waves of ``slots`` equal-
+  length prompts prefill *batched* (the prefill path the dry-run lowers at
+  32k) then decode in lockstep with a scalar position; a finished request
+  parks its slot until the wave drains. Snapshot polls land between waves.
+
+Both report per-request TTFT / end-to-end latency percentiles and
+``wasted_slot_steps`` (slot-steps burned on pad/finished slots) so the
+schedulers compare honestly — see ``benchmarks/serving_latency.py``.
 
 CPU-scale demo:  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
     --reduced --requests 6 --slots 2 --max-new 16
@@ -13,27 +23,38 @@ CPU-scale demo:  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
+from repro.launch.engine import (ContinuousEngine, Request, request_stats)
 from repro.models.model import Model
 
+__all__ = ["Request", "ServeEngine", "serve", "group_into_waves"]
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: List[int]
-    max_new: int
-    out: List[int] = dataclasses.field(default_factory=list)
+
+def group_into_waves(requests: List[Request], slots: int) -> List[List[Request]]:
+    """Bucket by prompt length (wave prefill is one batched launch, so a
+    wave must be homogeneous), then chunk each bucket into waves of at most
+    ``slots``. Submission order is preserved within a bucket; short tail
+    waves get padded at run time — the honest cost the accounting exposes."""
+    buckets: Dict[int, List[Request]] = {}
+    for r in requests:
+        buckets.setdefault(len(r.prompt), []).append(r)
+    waves = []
+    for length in buckets:
+        group = buckets[length]
+        waves.extend(group[i: i + slots] for i in range(0, len(group), slots))
+    return waves
 
 
 class ServeEngine:
+    """Lockstep wave scheduler (the fallback baseline)."""
+
     def __init__(self, model: Model, params, slots: int, cap: int):
         self.model = model
         self.params = params
@@ -41,7 +62,11 @@ class ServeEngine:
         self.cap = cap
         self._prefill = jax.jit(lambda p, b: model.prefill(p, b, cap))
         self._decode = jax.jit(model.decode_step)
-        self.engine_steps = 0
+        self.engine_steps = 0        # decode launches
+        self.slot_steps = 0          # slot-steps doing live work
+        self.wasted_slot_steps = 0   # slot-steps on pad/finished slots
+        self.prefills = 0
+        self._t0 = time.perf_counter()
 
     def run_wave(self, wave: List[Request]) -> None:
         assert len({len(r.prompt) for r in wave}) == 1, "wave = equal prompts"
@@ -51,38 +76,70 @@ class ServeEngine:
             prompts = np.pad(prompts, ((0, self.slots - n), (0, 0)))
         batch = {"tokens": jnp.asarray(prompts)}
         cache, pos, last_logits = self._prefill(self.params, batch)
+        self.prefills += 1
         tok = jnp.argmax(last_logits[:, 0], axis=-1).astype(jnp.int32)
+        tok_np = np.asarray(tok)  # one host sync per step, not one per slot
+        now = time.perf_counter() - self._t0
         for i, r in enumerate(wave):
-            r.out.append(int(tok[i]))
+            r.out.append(int(tok_np[i]))
+            r.t_first = now
+            if len(r.out) >= r.max_new:
+                r.t_done = now
         max_new = max(r.max_new for r in wave)
         for t in range(max_new - 1):
+            # pad rows (slots - n) and already-finished requests still run
+            # the full decode step — that is the wave scheduler's cost; it
+            # is *reported* as waste, never as engine work
+            live = sum(1 for r in wave if len(r.out) < r.max_new)
             logits, cache = self._decode(self.params, cache, tok, pos + t)
             self.engine_steps += 1
+            self.slot_steps += live
+            self.wasted_slot_steps += self.slots - live
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tok_np = np.asarray(tok)
+            now = time.perf_counter() - self._t0
             for i, r in enumerate(wave):
                 if len(r.out) < r.max_new:
-                    r.out.append(int(tok[i]))
+                    r.out.append(int(tok_np[i]))
+                    if len(r.out) >= r.max_new:
+                        r.t_done = now
 
 
 def serve(model: Model, params, requests: List[Request], slots: int,
-          cap: int, refresh=None) -> Dict:
-    """Serve ``requests`` in waves. ``refresh`` (nullary, returns True on
-    change) is polled *between* waves — the hook for schedule-snapshot hot
-    reload: a fleet republish lands in a long-running serve process at the
-    next wave boundary, no restart, and never mid-wave."""
-    engine = ServeEngine(model, params, slots, cap)
-    reloads = 0
+          cap: int, refresh=None, scheduler: str = "continuous") -> Dict:
+    """Serve ``requests`` with the chosen scheduler.
+
+    ``refresh`` (nullary, returns True on change) is the schedule-snapshot
+    hot-reload hook: a fleet republish lands in a long-running serve
+    process with no restart. The wave scheduler polls it *between* waves
+    (never mid-wave); the continuous engine polls at *admission*
+    boundaries — the moment a new request enters the engine.
+    """
     t0 = time.perf_counter()
-    for i in range(0, len(requests), slots):
-        if refresh is not None and i and refresh():
-            reloads += 1
-        engine.run_wave(requests[i: i + slots])
+    if scheduler == "continuous":
+        engine = ContinuousEngine(model, params, slots, cap, refresh=refresh)
+        engine.run(requests)
+        stats = engine.stats()
+    elif scheduler == "wave":
+        engine = ServeEngine(model, params, slots, cap)
+        reloads = 0
+        for i, wave in enumerate(group_into_waves(requests, slots)):
+            if refresh is not None and i and refresh():
+                reloads += 1
+            engine.run_wave(wave)
+        stats = {"engine_steps": engine.engine_steps,
+                 "slot_steps": engine.slot_steps,
+                 "wasted_slot_steps": engine.wasted_slot_steps,
+                 "prefills": engine.prefills,
+                 "cache_reloads": reloads}
+    else:
+        raise ValueError(f"unknown scheduler: {scheduler!r}")
     wall = time.perf_counter() - t0
     toks = sum(len(r.out) for r in requests)
-    return {"wall_s": wall, "tokens": toks,
-            "tok_per_s": toks / max(wall, 1e-9),
-            "engine_steps": engine.engine_steps,
-            "cache_reloads": reloads}
+    stats.update({"scheduler": scheduler, "wall_s": wall, "tokens": toks,
+                  "tok_per_s": toks / max(wall, 1e-9)})
+    stats.update(request_stats(requests))
+    return stats
 
 
 def main() -> None:
@@ -93,6 +150,10 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--scheduler", choices=("continuous", "wave"),
+                    default="continuous",
+                    help="continuous = per-slot positions + refill on free; "
+                         "wave = lockstep fallback for parity comparison")
     ap.add_argument("--schedule-db", default=None,
                     help="warm repro.tuna schedule DB (JSONL) so trace-time "
                          "block-spec picks are lookups, not searches")
@@ -100,10 +161,11 @@ def main() -> None:
                     help="immutable schedule snapshot (python -m repro.tuna "
                          "snapshot); consulted before the DB — the lock-free "
                          "serving hot path. Accepts a versioned snapshot or "
-                         "a SnapshotManager `latest` pointer; polled between "
-                         "waves, so a republish lands without restart")
+                         "a SnapshotManager `latest` pointer; polled at "
+                         "admission/wave boundaries, so a republish lands "
+                         "without restart")
     ap.add_argument("--no-schedule-refresh", action="store_true",
-                    help="do not poll the snapshot between waves (pin the "
+                    help="do not poll the snapshot while serving (pin the "
                          "instance loaded at startup)")
     args = ap.parse_args()
 
@@ -147,9 +209,16 @@ def main() -> None:
             return swapped
 
     stats = serve(model, params, reqs, slots=args.slots, cap=cap,
-                  refresh=refresh)
-    print(f"[serve] {stats['tokens']} tokens in {stats['wall_s']:.2f}s "
-          f"({stats['tok_per_s']:.1f} tok/s, {stats['engine_steps']} engine steps)")
+                  refresh=refresh, scheduler=args.scheduler)
+    print(f"[serve] {stats['scheduler']}: {stats['tokens']} tokens in "
+          f"{stats['wall_s']:.2f}s ({stats['tok_per_s']:.1f} tok/s, "
+          f"{stats['engine_steps']} engine steps, "
+          f"{stats['slot_steps']} live slot-steps, "
+          f"{stats['wasted_slot_steps']} wasted)")
+    print(f"[serve] ttft p50/p95/p99 = {stats['ttft_s']['p50']:.3f}/"
+          f"{stats['ttft_s']['p95']:.3f}/{stats['ttft_s']['p99']:.3f}s; "
+          f"latency p50/p95/p99 = {stats['latency_s']['p50']:.3f}/"
+          f"{stats['latency_s']['p95']:.3f}/{stats['latency_s']['p99']:.3f}s")
     if cache_installed:
         from repro.core import tuner
 

@@ -143,10 +143,16 @@ def decode_attention(
     x: jax.Array,  # [B, 1, D]
     cache_k: jax.Array,  # [B, Hkv, CAP, dh]
     cache_v: jax.Array,
-    pos: jax.Array,  # scalar int32: index of the new token
+    pos: jax.Array,  # scalar i32 (lockstep) or [B] i32 (per-slot depths)
     cross: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One-token attention over the cache; returns (y, new_k, new_v).
+
+    ``pos`` is the index where each new token sits. A scalar means every
+    row decodes at the same depth (wave scheduling); a ``[B]`` vector gives
+    each slot its own depth (continuous batching) — RoPE angles, the cache
+    write index, and the validity mask are then all per-slot, so rows at
+    different sequence lengths share one decode launch.
 
     For cross-attention the cache is the (static) encoder projection and no
     update happens. The einsums reduce over the cache's sequence axis — when
@@ -157,6 +163,7 @@ def decode_attention(
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     g = h // hkv
     cap = cache_k.shape[2]
+    vector_pos = (not cross) and pos.ndim == 1
 
     q = (x.astype(cd) @ p["wq"].astype(cd))
     if "bq" in p:
@@ -170,17 +177,35 @@ def decode_attention(
             knew, vnew = knew + p["bk"].astype(cd), vnew + p["bv"].astype(cd)
         knew = knew.reshape(b, hkv, 1, dh)
         vnew = vnew.reshape(b, hkv, 1, dh)
-        sin, cos = L.rope_tables(cfg, pos[None].astype(jnp.int32))  # [1, dh/2]
+        if vector_pos:
+            # per-row tables [B, 1, dh/2]; lift to [B, 1, 1, dh/2] so they
+            # broadcast over the head axis of q [B, H, 1, dh] / knew
+            sin, cos = L.rope_tables(cfg, pos[:, None].astype(jnp.int32))
+            sin, cos = sin[:, None], cos[:, None]
+        else:
+            sin, cos = L.rope_tables(cfg, pos[None].astype(jnp.int32))  # [1, dh/2]
         q = L.apply_rope(q.reshape(b, h, 1, dh), sin, cos).reshape(b, h, dh)
         knew = L.apply_rope(knew, sin, cos)
-        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, knew.astype(cache_k.dtype), pos, axis=2)
-        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, vnew.astype(cache_v.dtype), pos, axis=2)
+        if vector_pos:
+            upd = jax.vmap(
+                lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=1)
+            )
+            cache_k = upd(cache_k, knew.astype(cache_k.dtype), pos)
+            cache_v = upd(cache_v, vnew.astype(cache_v.dtype), pos)
+        else:
+            cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, knew.astype(cache_k.dtype), pos, axis=2)
+            cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, vnew.astype(cache_v.dtype), pos, axis=2)
 
     qg = q.reshape(b, hkv, g, dh).astype(jnp.float32) * (dh ** -0.5)
     logits = jnp.einsum("bhgd,bhkd->bhgk", qg, cache_k.astype(jnp.float32))
     idx = jnp.arange(cap)
-    valid = idx <= pos if not cross else jnp.ones((cap,), bool)
-    logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+    if cross:
+        valid = jnp.ones((b, 1, 1, cap), bool)
+    elif vector_pos:
+        valid = (idx[None, :] <= pos[:, None])[:, None, None]  # [B,1,1,cap]
+    else:
+        valid = (idx <= pos)[None, None, None]
+    logits = jnp.where(valid, logits, NEG_INF)
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgk,bhkd->bhgd", w, cache_v.astype(jnp.float32))
     merged = out.reshape(b, 1, h * dh).astype(cd)

@@ -5,8 +5,9 @@ Batch schemas (all arrays device-shardable):
   audio:        + {"frames": [B, n_frontend_tokens, D]}     (STUB frontend)
   vlm:          + {"patches": [B, n_frontend_tokens, D]}    (STUB frontend)
 
-Decode state (``DecodeState``) carries the per-layer cache tuple, the scalar
-position, and (enc-dec only) cross-attention caches built at prefill.
+Decode state (``DecodeState``) carries the per-layer cache tuple, the
+position (scalar for lockstep waves, ``[B]`` for per-slot continuous
+batching), and (enc-dec only) cross-attention caches built at prefill.
 """
 from __future__ import annotations
 
@@ -144,7 +145,9 @@ class Model:
         return caches, jnp.asarray(s_total, jnp.int32), last_logits
 
     def decode_step(self, params, cache, token: jax.Array, pos: jax.Array):
-        """token [B] i32, pos scalar i32 (index where this token sits).
+        """token [B] i32; pos scalar i32 (all rows at the same depth) or
+        [B] i32 (per-slot depths — continuous batching, each row attends,
+        ropes and cache-writes at its own position).
         Returns (logits [B, V], new_cache)."""
         cfg = self.cfg
         x = L.embed(cfg, params["embed"], token[:, None])

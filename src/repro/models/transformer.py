@@ -259,6 +259,10 @@ def apply_stack_decode(
     pos: jax.Array,
     pattern: Optional[Tuple[Tuple[str, str], ...]] = None,
 ) -> Tuple[jax.Array, Tuple]:
+    """One decode step through the scanned stack. ``pos`` is a scalar (all
+    rows at the same depth) or ``[B]`` vector (per-slot depths); it is
+    closed over by the scan body and handled in ``attn.decode_attention``
+    (SSM/xLSTM mixers are position-free recurrences)."""
     pattern = pattern or cfg.pattern()
 
     def body(xc, inp):
