@@ -1,0 +1,210 @@
+"""Fleet-throughput benchmark: the controller daemon vs the manual flow.
+
+Runs the same (op × target) tuning matrix three ways and emits
+``BENCH_fleet.json``:
+
+* **manual** — the pre-controller operator loop, by hand: ``run_fleet``
+  over every shard, then ``sync``, then ``SnapshotManager.ensure`` (jobs
+  per second, wall time to a published snapshot);
+* **controller** — one ``FleetController.run()`` on an in-process
+  ``mem://`` transport doing dispatch + sync + snapshot autonomously
+  (time-to-converged-snapshot, controller overhead vs manual);
+* **controller_healed** — the same run with one worker crash injected on
+  its first dispatch: heal latency (failure observed → shard healed →
+  re-tuned store published) and the convergence cost of a crash.
+
+A parity verdict confirms all three converge to the same best-record
+set (bookkeeping meta — provenance, tuned_at — stripped). ``--check``
+exits non-zero if parity fails, the healed run did not actually heal, or
+either controller run failed to converge.
+
+    PYTHONPATH=src python -m benchmarks.fleet_throughput --check
+    PYTHONPATH=src python -m benchmarks.fleet_throughput \
+        --ops dense_256,batch_matmul --shards 4 --limit 128
+
+Everything here is numpy-backed (no jax): what is measured is the
+orchestration overhead, not kernel time.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+from typing import Dict
+
+from repro.tuna import fleet, orchestrator
+from repro.tuna.cache import SnapshotManager
+from repro.tuna.controller import ControllerConfig, FleetController
+from repro.tuna.db import ScheduleDatabase, strip_bookkeeping
+from repro.tuna.transport import MemoryTransport
+
+
+def _strip(db: ScheduleDatabase):
+    return [
+        (r.op, r.target, r.version,
+         json.dumps(r.config, sort_keys=True), r.score, r.evaluations,
+         strip_bookkeeping(r.meta))
+        for r in db.records()
+    ]
+
+
+def run_manual(jobs, num_shards: int, workdir: str, workers: int) -> Dict:
+    """The by-hand operator flow the controller replaces: tune every
+    shard, sync, snapshot."""
+    base = os.path.join(workdir, "manual", "fleet.jsonl")
+    t0 = time.perf_counter()
+    report = fleet.run_fleet(jobs, num_shards, base, workers=workers)
+    tune_s = time.perf_counter() - t0
+    assert report.ok
+    t1 = time.perf_counter()
+    rep = fleet.sync(base, num_shards)
+    sync_s = time.perf_counter() - t1
+    t2 = time.perf_counter()
+    info = SnapshotManager(base, base + ".snapshots").ensure()
+    snapshot_s = time.perf_counter() - t2
+    total = time.perf_counter() - t0
+    return {
+        "db": base,
+        "jobs": len(jobs),
+        "records": rep.keys,
+        "snapshot_sha1": info.sha1,
+        "tune_s": round(tune_s, 4),
+        "sync_s": round(sync_s, 4),
+        "snapshot_s": round(snapshot_s, 4),
+        "time_to_snapshot_s": round(total, 4),
+        "jobs_per_s": round(len(jobs) / max(total, 1e-9), 2),
+    }
+
+
+def run_controller(jobs, num_shards: int, workdir: str, workers: int,
+                   crash_shard=None, tag: str = "controller") -> Dict:
+    t = MemoryTransport(f"bench-{tag}")
+    MemoryTransport.wipe(t.bucket)
+    cfg = ControllerConfig(
+        db=os.path.join(workdir, tag, "fleet.jsonl"),
+        ops=[], targets=[],  # jobs passed explicitly below
+        num_shards=num_shards, transport=t, poll_s=0.01,
+        worker_procs=workers, inject_crash_shard=crash_shard, quiet=True)
+    ctl = FleetController(cfg, jobs=jobs)
+    t0 = time.perf_counter()
+    rc = ctl.run(exit_when_converged=True)
+    total = time.perf_counter() - t0
+
+    heal_latency_s = None
+    if crash_shard is not None:
+        # failure observed -> healed shard's store published, from the
+        # controller's own event log
+        failed = [e["t"] for e in ctl.events
+                  if e["event"] == "failed" and e["shard"] == crash_shard]
+        done = [e["t"] for e in ctl.events
+                if e["event"] == "done" and e["shard"] == crash_shard]
+        if failed and done:
+            heal_latency_s = round(done[-1] - failed[0], 4)
+    m = ctl.metrics
+    return {
+        "db": cfg.db,
+        "jobs": len(jobs),
+        "converged": ctl.converged,
+        "rc": rc,
+        "rounds": ctl.rounds,
+        "records": int(m.get("store_records")),
+        "snapshot_sha1": getattr(ctl._snapshot_info, "sha1", None),
+        "jobs_done": int(m.get("jobs_done_total")),
+        "jobs_healed": int(m.get("jobs_healed_total")),
+        "shards_healed": int(m.get("shards_healed_total")),
+        "time_to_converged_snapshot_s": round(total, 4),
+        "jobs_per_s": round(len(jobs) / max(total, 1e-9), 2),
+        "heal_latency_s": heal_latency_s,
+    }
+
+
+def run_benchmark(ops, targets, num_shards: int, limit: int,
+                  workers: int, workdir: str) -> Dict:
+    jobs = orchestrator.jobs_for(ops, targets, limit=limit)
+    manual = run_manual(jobs, num_shards, workdir, workers)
+    ctl = run_controller(jobs, num_shards, workdir, workers)
+    healed = run_controller(jobs, num_shards, workdir, workers,
+                            crash_shard=0, tag="controller-healed")
+
+    stores = {name: _strip(ScheduleDatabase(r["db"]))
+              for name, r in (("manual", manual), ("controller", ctl),
+                              ("controller_healed", healed))}
+    parity = {
+        "controller_vs_manual": stores["controller"] == stores["manual"],
+        "healed_vs_manual": stores["controller_healed"] == stores["manual"],
+    }
+    parity["ok"] = all(parity.values())
+    for r in (manual, ctl, healed):
+        del r["db"]
+    return {
+        "ops": list(ops), "targets": list(targets),
+        "num_shards": num_shards, "limit": limit, "jobs": len(jobs),
+        "manual": manual, "controller": ctl, "controller_healed": healed,
+        "parity": parity,
+        "overhead": {
+            "controller_vs_manual_s": round(
+                ctl["time_to_converged_snapshot_s"]
+                - manual["time_to_snapshot_s"], 4),
+            "crash_convergence_cost_s": round(
+                healed["time_to_converged_snapshot_s"]
+                - ctl["time_to_converged_snapshot_s"], 4),
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ops", default="dense_256,batch_matmul")
+    ap.add_argument("--targets", default="tpu_v5e")
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--limit", type=int, default=64)
+    ap.add_argument("--workers", type=int, default=1,
+                    help="orchestrator pool size inside each shard worker")
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless all three flows converge to the "
+                         "same store and the crash run actually healed")
+    args = ap.parse_args()
+
+    workdir = tempfile.mkdtemp(prefix="bench_fleet_")
+    try:
+        res = run_benchmark(args.ops.split(","), args.targets.split(","),
+                            args.shards, args.limit, args.workers, workdir)
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2, sort_keys=True)
+
+    man, ctl, healed = (res["manual"], res["controller"],
+                        res["controller_healed"])
+    print(f"[bench_fleet] manual            {man['jobs']} jobs, "
+          f"{man['jobs_per_s']:.2f} jobs/s, "
+          f"snapshot in {man['time_to_snapshot_s']:.2f}s")
+    print(f"[bench_fleet] controller        {ctl['jobs_done']} jobs, "
+          f"{ctl['jobs_per_s']:.2f} jobs/s, "
+          f"converged in {ctl['time_to_converged_snapshot_s']:.2f}s "
+          f"({ctl['rounds']} rounds)")
+    print(f"[bench_fleet] controller+crash  {healed['jobs_done']} jobs, "
+          f"{healed['shards_healed']} shard healed in "
+          f"{healed['heal_latency_s']}s, converged in "
+          f"{healed['time_to_converged_snapshot_s']:.2f}s")
+    print(f"[bench_fleet] parity={res['parity']['ok']} "
+          f"controller_overhead={res['overhead']['controller_vs_manual_s']}s "
+          f"-> {args.out}")
+    if args.check:
+        ok = (res["parity"]["ok"]
+              and ctl["converged"] and healed["converged"]
+              and healed["shards_healed"] == 1
+              and healed["heal_latency_s"] is not None)
+        if not ok:
+            print("[bench_fleet] CHECK FAILED", file=sys.stderr)
+            sys.exit(1)
+        print("[bench_fleet] CHECK OK")
+
+
+if __name__ == "__main__":
+    main()

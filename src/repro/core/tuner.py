@@ -326,7 +326,7 @@ def tune(
         default_score=_score_config(space, target, space.default_config()),
     )
     if _writable(store):
-        from repro.tuna.db import ScheduleRecord
+        from repro.tuna.db import ScheduleRecord, stamp_tuned_at
 
         store.add(ScheduleRecord(
             op=space.signature(),
@@ -334,7 +334,8 @@ def tune(
             config=dict(best_cfg),
             score=best_score,
             evaluations=res.evaluations,
-            meta={"strategy": "es", "default_score": result.default_score},
+            meta=stamp_tuned_at(
+                {"strategy": "es", "default_score": result.default_score}),
         ))
     return result
 
@@ -360,7 +361,7 @@ def rank_space(
     scored.sort(key=lambda cs: cs[1])
     store = resolve_db(db)
     if _writable(store) and scored:
-        from repro.tuna.db import ScheduleRecord
+        from repro.tuna.db import ScheduleRecord, stamp_tuned_at
 
         version = record_version(coeffs)
         meta = {"strategy": "exhaustive", "limit": limit}
@@ -368,6 +369,7 @@ def rank_space(
         default_score = next((s for c, s in scored if c == dflt), None)
         if default_score is not None:  # centre config inside the limit
             meta["default_score"] = default_score
+        meta = stamp_tuned_at(meta)
         store.add(ScheduleRecord(
             op=space.signature(),
             target=target.name,

@@ -8,6 +8,9 @@ moves shard stores and snapshots between hosts over manifest-verified
 channels (no shared filesystem required); ``cache`` compiles the store
 into an immutable serving-time snapshot and manages its lifecycle
 (``SnapshotManager``: versioned names, a ``latest`` pointer, publish);
+``controller`` runs the whole fleet as a daemon — lease-tracked shard
+dispatch, crash healing, sync + verify, snapshot republish, and an HTTP
+schedule/health/metrics API (``python -m repro.tuna controller``);
 ``cli`` drives all of it (``python -m repro.tuna``). ``core.tuner``
 consults the snapshot and the DB transparently and hot-reloads republished
 snapshots via ``refresh_default_cache`` — see ``tuner.set_default_db`` /

@@ -34,6 +34,7 @@ import hashlib
 import json
 import os
 import tempfile
+import time
 import warnings
 from typing import Dict, List, Optional, Sequence, Union
 
@@ -119,6 +120,9 @@ class ScheduleCache:
         self._best = best
         self.source = source
         self.sha1: Optional[str] = None  # payload digest; set by save/load
+        self.built_at: Optional[float] = None  # wall-clock build stamp; set
+        #   by save/load (None for pre-stamp snapshots) — what the
+        #   controller's snapshot_age_seconds gauge is computed from
         self.cost_model_version = COST_MODEL_VERSION
         self.stale = False  # True only for allow_stale version-mismatch loads
         self.hits = 0    # serving stats: plain ints, never locked (exact
@@ -154,11 +158,16 @@ class ScheduleCache:
         before the record array so ``read_snapshot_header`` stays cheap;
         returns the record count."""
         records = [dataclasses.asdict(r) for r in self.records()]
+        # built_at sits in the header (before "records", so the cheap
+        # header probe sees it) but outside the sha1 payload: rebuilding
+        # identical content at a later time keeps the same content address
+        self.built_at = round(time.time(), 3)
         obj = {
             "schema": SNAPSHOT_SCHEMA,
             "cost_model_version": COST_MODEL_VERSION,
             "count": len(records),
             "sha1": self.payload_sha1(),
+            "built_at": self.built_at,
             "source": self.source,
             "records": records,
         }
@@ -220,6 +229,7 @@ class ScheduleCache:
         records = [ScheduleRecord.from_dict(r) for r in obj["records"]]
         cache = cls(records, source=obj.get("source", path))
         cache.sha1 = obj["sha1"]
+        cache.built_at = obj.get("built_at")  # None: pre-stamp snapshot
         cache.cost_model_version = snap_version
         cache.stale = stale
         return cache
@@ -270,6 +280,8 @@ class SnapshotInfo:
     count: int
     rebuilt: bool     # a new versioned snapshot file was written
     repointed: bool   # the latest pointer moved
+    built_at: Optional[float] = None  # wall-clock stamp of the snapshot
+    #   file latest points at (survives no-op ensures: age keeps growing)
 
 
 class SnapshotManager:
@@ -319,20 +331,29 @@ class SnapshotManager:
         rebuilt = force or not os.path.exists(path)
         if rebuilt:
             cache.save(path)
+            built_at = cache.built_at
+        else:  # no-op ensure: the artifact keeps its original build stamp
+            try:
+                built_at = read_snapshot_header(path).get("built_at")
+            except (OSError, ValueError):
+                built_at = None
         cur = self.current()
         repointed = cur is None or cur.get("snapshot") != name
         if repointed:
-            self._write_pointer(name, digest, len(cache))
+            self._write_pointer(name, digest, len(cache), built_at)
         return SnapshotInfo(name=name, path=path, latest=self.latest_path,
                             sha1=digest, count=len(cache),
-                            rebuilt=rebuilt, repointed=repointed)
+                            rebuilt=rebuilt, repointed=repointed,
+                            built_at=built_at)
 
-    def _write_pointer(self, name: str, sha1: str, count: int) -> None:
+    def _write_pointer(self, name: str, sha1: str, count: int,
+                       built_at: Optional[float] = None) -> None:
         obj = {
             "schema": POINTER_SCHEMA,
             "snapshot": name,
             "sha1": sha1,
             "count": count,
+            "built_at": built_at,
             "cost_model_version": COST_MODEL_VERSION,
         }
         os.makedirs(self.out_dir, exist_ok=True)

@@ -14,7 +14,14 @@ Subcommands:
            --publish pushes the artifact over a transport
   query    print best records (filter by --op prefix / --target /
            --version; --snapshot reads a compiled cache instead of the DB —
-           a stale-version snapshot is an error unless --allow-stale)
+           a stale-version snapshot is an error unless --allow-stale;
+           --json emits one array with the same serialization the
+           controller's /schedule endpoint uses)
+  controller
+           run the fleet as a daemon: dispatch shard workers under leases,
+           heal crashes/expiries, sync + verify, republish snapshots, and
+           serve GET /schedule /healthz /metrics (Prometheus text) —
+           see repro.tuna.controller
   compact  rewrite the log keeping only the best record per key
   export   dump best records as a JSON array
 
@@ -39,7 +46,6 @@ Examples:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import sys
 from typing import List, Optional
@@ -86,7 +92,7 @@ def cmd_tune(args: argparse.Namespace) -> int:
         print(f"error: --shard-id must be in [0, {args.num_shards})",
               file=sys.stderr)
         return 2
-    if args.num_shards > 1:
+    if args.num_shards > 1 or args.as_shard:
         from repro.tuna import fleet
 
         jobs = fleet.shard_jobs(jobs, args.num_shards, args.shard_id)
@@ -202,14 +208,87 @@ def cmd_query(args: argparse.Namespace) -> int:
                   file=sys.stderr)
     else:
         store = ScheduleDatabase(args.db)
+    from repro.tuna.db import record_to_dict
+
     recs = store.query(op=args.op, target=args.target, version=args.version)
+    if args.json:
+        # one serializer shared with the controller's /schedule endpoint
+        # (db.record_to_dict): scripts can diff the two without caring
+        # which side of the service they asked
+        print(json.dumps([record_to_dict(r) for r in recs], indent=2,
+                         sort_keys=True, default=float))
+        return 0 if recs else 1
     if not recs:
         print("no matching records", file=sys.stderr)
         return 1
     for rec in recs:
-        print(json.dumps(dataclasses.asdict(rec), sort_keys=True,
-                         default=float))
+        print(json.dumps(record_to_dict(rec), sort_keys=True, default=float))
     return 0
+
+
+def cmd_controller(args: argparse.Namespace) -> int:
+    from repro.tuna.controller import (ControllerConfig, FleetController,
+                                       start_http)
+
+    if args.smoke:
+        ops = list(SMOKE_OPERATORS)
+        targets = ["tpu_v5e"]
+        limit = min(args.limit, 256)
+    else:
+        ops = _csv(args.ops) if args.ops != "all" else list(OPERATORS)
+        targets = _csv(args.targets)
+        limit = args.limit
+    for op in ops:
+        if op not in OPERATORS:
+            print(f"error: unknown operator {op!r}; have {sorted(OPERATORS)}",
+                  file=sys.stderr)
+            return 2
+    for t in targets:
+        if t not in TARGETS:
+            print(f"error: unknown target {t!r}; have {sorted(TARGETS)}",
+                  file=sys.stderr)
+            return 2
+    cfg = ControllerConfig(
+        db=args.db, ops=ops, targets=targets, num_shards=args.num_shards,
+        strategy=args.strategy, limit=limit, seed=args.seed,
+        transport=args.transport or None,
+        snapshot_dir=args.snapshot_dir, publish=args.publish or None,
+        lease_s=args.lease_s, poll_s=args.poll_s,
+        max_attempts=args.max_attempts, max_workers=args.max_workers,
+        worker_procs=args.workers, worker_retries=args.retries,
+        worker_mode=args.worker_mode,
+        inject_crash_shard=args.inject_crash_shard,
+    )
+    ctl = FleetController(cfg)
+    server = None
+    if args.port is not None:
+        server = start_http(ctl, host=args.host, port=args.port)
+        host, port = server.server_address[:2]
+        print(f"[controller] serving http://{host}:{port} "
+              f"(/schedule /healthz /metrics)", flush=True)
+
+    import signal
+
+    def _stop(signum, frame):
+        print(f"[controller] signal {signum}: shutting down", flush=True)
+        ctl.stop()
+
+    for sig in (signal.SIGINT, signal.SIGTERM):
+        signal.signal(sig, _stop)
+    try:
+        rc = ctl.run(max_rounds=args.max_rounds or None,
+                     exit_when_converged=args.exit_when_converged)
+    finally:
+        if server is not None:
+            server.shutdown()
+            server.server_close()
+    state = "converged" if ctl.converged else \
+        ("wedged" if ctl.wedged else "stopped")
+    print(f"[controller] exit: {state}, "
+          f"{int(ctl.metrics.get('jobs_done_total'))} jobs done, "
+          f"{int(ctl.metrics.get('shards_healed_total'))} shards healed, "
+          f"{ctl._store_records} store records", flush=True)
+    return rc
 
 
 def cmd_compact(args: argparse.Namespace) -> int:
@@ -250,6 +329,10 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--shard-id", type=int, default=0,
                    help="which shard this host owns (writes to "
                         "<db>.shardNN.jsonl)")
+    p.add_argument("--as-shard", action="store_true",
+                   help="use the per-shard store layout even with "
+                        "--num-shards 1 (what controller workers pass, so "
+                        "sync/heal semantics hold for one-shard fleets)")
     p.add_argument("--transport", default=None, metavar="SPEC",
                    help="push the finished store into this channel "
                         "(dir:///path, mem://bucket, or a bare directory) "
@@ -303,7 +386,70 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--op", default=None, help="exact op signature or prefix")
     p.add_argument("--target", default=None)
     p.add_argument("--version", default=None)
+    p.add_argument("--json", action="store_true",
+                   help="emit one JSON array (same serialization as the "
+                        "controller's /schedule endpoint) instead of "
+                        "JSONL lines")
     p.set_defaults(fn=cmd_query)
+
+    p = sub.add_parser(
+        "controller",
+        help="run the fleet controller daemon (dispatch + heal + sync + "
+             "snapshot + HTTP schedule/metrics API)")
+    p.add_argument("--db", default=DEFAULT_DB, help="base store path")
+    p.add_argument("--ops", default="all",
+                   help="comma-separated configs.tuna_ops names, or 'all'")
+    p.add_argument("--targets", default="tpu_v5e,cpu_avx2")
+    p.add_argument("--strategy", choices=["exhaustive", "es"],
+                   default="exhaustive")
+    p.add_argument("--limit", type=int, default=1024)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny fixed job matrix (CI controller-smoke)")
+    p.add_argument("--num-shards", type=int, default=2)
+    p.add_argument("--transport", default=None, metavar="SPEC",
+                   help="fleet channel the workers push shard stores into "
+                        "and sync pulls from (dir:///path, mem://bucket)")
+    p.add_argument("--snapshot-dir", default=None,
+                   help="versioned snapshot + `latest` pointer directory "
+                        "(default <db>.snapshots/)")
+    p.add_argument("--publish", default=None, metavar="SPEC",
+                   help="transport to publish snapshots over (what serving "
+                        "hosts' refresh_default_cache watches)")
+    p.add_argument("--port", type=int, default=None,
+                   help="serve GET /schedule /healthz /metrics on this "
+                        "port (0 = ephemeral, printed at boot; omit to "
+                        "run headless)")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--lease-s", type=float, default=300.0,
+                   help="shard lease: a worker silent past this is killed "
+                        "and its shard re-dispatched")
+    p.add_argument("--poll-s", type=float, default=0.5,
+                   help="control-loop heartbeat interval")
+    p.add_argument("--max-attempts", type=int, default=3,
+                   help="dispatches per shard before giving up on it")
+    p.add_argument("--max-workers", type=int, default=2,
+                   help="concurrent shard workers")
+    p.add_argument("--workers", type=int, default=2,
+                   help="orchestrator process pool inside each worker")
+    p.add_argument("--retries", type=int, default=2,
+                   help="per-job retries inside each worker")
+    p.add_argument("--worker-mode", choices=["auto", "process", "thread"],
+                   default="auto",
+                   help="auto = subprocess workers, in-process threads "
+                        "for mem:// channels")
+    p.add_argument("--max-rounds", type=int, default=0,
+                   help="stop after this many control rounds (0 = run "
+                        "until signalled)")
+    p.add_argument("--exit-when-converged", "--once", action="store_true",
+                   dest="exit_when_converged",
+                   help="exit as soon as the fleet converges (or wedges) "
+                        "instead of keeping watch")
+    p.add_argument("--inject-crash-shard", type=int, default=None,
+                   metavar="SHARD",
+                   help="fault injection: this shard's first dispatch "
+                        "dies before publishing (CI heal check)")
+    p.set_defaults(fn=cmd_controller)
 
     p = sub.add_parser("compact", help="drop superseded log lines")
     p.add_argument("--db", default=DEFAULT_DB)

@@ -31,6 +31,7 @@ import json
 import os
 import tempfile
 import threading
+import time
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 try:  # POSIX cross-process lock; degrades to thread-only elsewhere
@@ -47,6 +48,33 @@ from repro.core.cost_model import COST_MODEL_VERSION
 SCHEMA = "cm1"
 
 Key = Tuple[str, str, str]  # (op signature, target name, cost-model version)
+
+# Meta keys that are *bookkeeping*, not tuning content: which shard a record
+# travelled through (``provenance``) and when it was tuned (``tuned_at``).
+# They are stripped from the canonical record form (tie-breaks, divergence
+# checks): two hosts tuning the same key at different wall-clock times must
+# still converge on byte-identical winners, or fleet merges stop being
+# order-independent and ``sync --verify`` flags phantom divergence.
+TUNED_AT_KEY = "tuned_at"
+BOOKKEEPING_META = frozenset({"provenance", TUNED_AT_KEY})
+
+
+def strip_bookkeeping(meta: Dict) -> Dict:
+    """``meta`` without the bookkeeping keys (see ``BOOKKEEPING_META``)."""
+    return {k: v for k, v in meta.items() if k not in BOOKKEEPING_META}
+
+
+def stamp_tuned_at(meta: Optional[Dict] = None,
+                   now: Optional[float] = None) -> Dict:
+    """Return ``meta`` with a wall-clock ``tuned_at`` stamp (seconds since
+    the epoch, ms precision) added when absent. The stamp is what the fleet
+    controller's ``store_lag_seconds`` gauge is computed from; records
+    without it (pre-stamp stores) still load and merge — they just don't
+    move the lag gauge."""
+    meta = dict(meta or {})
+    if TUNED_AT_KEY not in meta:
+        meta[TUNED_AT_KEY] = round(time.time() if now is None else now, 3)
+    return meta
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,13 +132,24 @@ def query_index(index: Dict[Key, ScheduleRecord], op: Optional[str] = None,
     return out
 
 
+def record_to_dict(rec: ScheduleRecord) -> Dict:
+    """The one record serialization shared by ``query --json``, ``export``,
+    and the fleet controller's ``/schedule`` endpoint — operators reading
+    the CLI and services reading the HTTP API can never disagree on field
+    names or types."""
+    obj = dataclasses.asdict(rec)
+    obj["score"] = float(rec.score)
+    return obj
+
+
 def _canonical(rec: ScheduleRecord) -> str:
     """Canonical record JSON with merge bookkeeping stripped: the
-    provenance stamp says which shard a record travelled through, which
-    must never decide who wins a tie (a fleet-merged store and a
-    single-process store would otherwise pick different winners)."""
+    provenance stamp says which shard a record travelled through and
+    ``tuned_at`` when, neither of which must ever decide who wins a tie
+    (a fleet-merged store and a single-process store would otherwise pick
+    different winners)."""
     obj = dataclasses.asdict(rec)
-    obj["meta"] = {k: v for k, v in obj["meta"].items() if k != "provenance"}
+    obj["meta"] = strip_bookkeeping(obj["meta"])
     return json.dumps(obj, sort_keys=True, default=float)
 
 
@@ -329,10 +368,18 @@ class ScheduleDatabase:
     def records(self) -> List[ScheduleRecord]:
         return [self._best[k] for k in sorted(self._best)]
 
+    def last_tuned_at(self) -> Optional[float]:
+        """Newest ``meta.tuned_at`` stamp across the best records — what
+        the controller's ``store_lag_seconds`` gauge measures. ``None``
+        when no record carries the stamp (pre-stamp stores)."""
+        stamps = [r.meta[TUNED_AT_KEY] for r in self._best.values()
+                  if isinstance(r.meta.get(TUNED_AT_KEY), (int, float))]
+        return max(stamps) if stamps else None
+
     def export(self, out_path: str) -> int:
         """Write the best records as a JSON array (for dashboards / diffing);
         returns the record count."""
-        records = [dataclasses.asdict(r) for r in self.records()]
+        records = [record_to_dict(r) for r in self.records()]
         d = os.path.dirname(out_path)
         if d:
             os.makedirs(d, exist_ok=True)

@@ -37,10 +37,11 @@ import dataclasses
 import hashlib
 import json
 import os
+import time
 from typing import Dict, Iterable, List, Optional, Sequence
 
 from repro.tuna import orchestrator
-from repro.tuna.db import ScheduleDatabase, ScheduleRecord
+from repro.tuna.db import ScheduleDatabase, ScheduleRecord, strip_bookkeeping
 from repro.tuna.orchestrator import TuneJob
 
 PROVENANCE_KEY = "provenance"
@@ -127,6 +128,67 @@ def shard_object_name(base_path: str, shard_id: int) -> str:
     return os.path.basename(shard_store_path(base_path, shard_id))
 
 
+def shard_present(base_path: str, shard_id: int, transport=None) -> bool:
+    """The crash-skip probe shared by ``sync`` and the fleet controller:
+    a shard's work is *present* when its store file exists (shared-fs
+    fleet) or its store object + manifest are in the channel (transport
+    fleet — the manifest is the commit marker, so a mid-push crash still
+    counts as absent). A shard that is not present has crashed or hasn't
+    run; the controller re-dispatches it, ``sync`` skips it."""
+    if transport is not None:
+        from repro.tuna.transport import resolve_transport
+
+        return resolve_transport(transport).exists(
+            shard_object_name(base_path, shard_id))
+    return os.path.exists(shard_store_path(base_path, shard_id))
+
+
+def missing_shards(base_path: str, num_shards: int,
+                   transport=None) -> List[int]:
+    """Shard ids whose stores have not arrived yet (crashed / not run) —
+    ``shard_present`` over the whole fleet."""
+    return [i for i in range(num_shards)
+            if not shard_present(base_path, i, transport=transport)]
+
+
+# -- leases ----------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardLease:
+    """A dispatched shard's liveness contract with the controller.
+
+    The worker holds the lease from ``granted_at`` until ``deadline``;
+    liveness checks (``heartbeat``) renew ``last_heartbeat`` but never the
+    deadline — a worker that outlives its lease is presumed wedged and its
+    shard is re-dispatched. Because tuning is a pure function of
+    (job matrix, shard id), a zombie worker that later finishes anyway is
+    harmless: it pushes byte-equivalent records and the merge's total
+    order makes absorbing them a no-op."""
+
+    shard_id: int
+    jobs: int                 # matrix jobs covered by this dispatch
+    granted_at: float         # time.monotonic()
+    lease_s: float
+    attempt: int = 1          # 1 = first dispatch, >1 = heal re-dispatch
+    worker: object = None     # controller-owned handle (poll()/kill())
+    last_heartbeat: float = 0.0
+
+    def __post_init__(self):
+        if not self.last_heartbeat:
+            self.last_heartbeat = self.granted_at
+
+    @property
+    def deadline(self) -> float:
+        return self.granted_at + self.lease_s
+
+    def heartbeat(self, now: Optional[float] = None) -> None:
+        self.last_heartbeat = time.monotonic() if now is None else now
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        now = time.monotonic() if now is None else now
+        return now > self.deadline
+
+
 def run_shard(jobs: Sequence[TuneJob], num_shards: int, shard_id: int,
               base_path: str, transport=None, **run_kwargs) -> ShardRun:
     """Tune this shard's slice of the matrix into its own store (the
@@ -210,7 +272,7 @@ def sync(base_path: str, num_shards: int, provenance: bool = True,
         present, skipped = [], []
         for i in range(num_shards):
             name = shard_object_name(base_path, i)
-            if not t.exists(name):
+            if not shard_present(base_path, i, transport=t):
                 skipped.append(name)
                 continue
             local = os.path.join(staging, name)
@@ -226,9 +288,10 @@ def sync(base_path: str, num_shards: int, provenance: bool = True,
             present.append(local)
             pulled.append(name)
     else:
-        paths = [shard_store_path(base_path, i) for i in range(num_shards)]
-        present = [p for p in paths if os.path.exists(p)]
-        skipped = [p for p in paths if not os.path.exists(p)]
+        present, skipped = [], []
+        for i in range(num_shards):
+            p = shard_store_path(base_path, i)
+            (present if shard_present(base_path, i) else skipped).append(p)
     if skipped and not missing_ok:
         raise FileNotFoundError(f"missing shard stores: {skipped}")
     db, stats, corrupt = ScheduleDatabase.sync(
@@ -247,7 +310,9 @@ def divergence(a, b, label_a: str = "a", label_b: str = "b") -> List[str]:
     msgs = []
 
     def _meta(rec: ScheduleRecord) -> Dict:
-        return {k: v for k, v in rec.meta.items() if k != PROVENANCE_KEY}
+        # bookkeeping (provenance, tuned_at) never counts as divergence:
+        # two hosts tuning the same matrix at different times ARE converged
+        return strip_bookkeeping(rec.meta)
 
     for key in sorted(set(recs_a) | set(recs_b)):
         ra, rb = recs_a.get(key), recs_b.get(key)

@@ -23,7 +23,7 @@ from typing import Dict, List, Optional, Sequence
 from repro.configs.tuna_ops import OPERATORS
 from repro.core import tuner
 from repro.hw import get_target
-from repro.tuna.db import ScheduleDatabase, ScheduleRecord
+from repro.tuna.db import ScheduleDatabase, ScheduleRecord, stamp_tuned_at
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,7 +91,8 @@ def run_job(job: TuneJob) -> ScheduleRecord:
         config=dict(cfg),
         score=score,
         evaluations=evaluations,
-        meta={"strategy": job.strategy, "default_score": default_score},
+        meta=stamp_tuned_at(
+            {"strategy": job.strategy, "default_score": default_score}),
     )
 
 

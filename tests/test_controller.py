@@ -1,0 +1,454 @@
+"""Fleet controller daemon: lease-tracked dispatch, crash healing, the
+reconcile + snapshot loop, the HTTP schedule/health/metrics API, and the
+tuned_at / built_at freshness stamps.
+
+The acceptance spine: a controller round on a ``mem://`` transport with
+one worker killed mid-shard must observe the failure, re-dispatch the
+shard, and converge to a store record-for-record identical to a clean
+single-process ``run_fleet`` — zero manual steps.
+
+Like test_fleet.py this module must stay jax-free: everything here is
+numpy-backed and in-process (ThreadWorker mode).
+"""
+import json
+import os
+import threading
+import time
+import urllib.request
+
+import pytest
+
+from repro.core.cost_model import COST_MODEL_VERSION
+from repro.tuna import cli, fleet, orchestrator
+from repro.tuna.cache import ScheduleCache, read_snapshot_header
+from repro.tuna.controller import (
+    ControllerConfig,
+    ControllerMetrics,
+    FleetController,
+    ThreadWorker,
+    start_http,
+)
+from repro.tuna.db import (
+    ScheduleDatabase,
+    ScheduleRecord,
+    record_to_dict,
+    strip_bookkeeping,
+)
+from repro.tuna.fleet import ShardLease
+from repro.tuna.transport import MemoryTransport
+
+JOB_OPS = ["dense_256", "batch_matmul"]
+JOB_TARGETS = ["tpu_v5e"]
+
+
+def _matrix():
+    return orchestrator.jobs_for(JOB_OPS, JOB_TARGETS, limit=64)
+
+
+def _mem(tmp_path) -> MemoryTransport:
+    bucket = f"ctl-{os.path.basename(tmp_path)}"
+    MemoryTransport.wipe(bucket)
+    return MemoryTransport(bucket)
+
+
+def _cfg(tmp_path, **kw) -> ControllerConfig:
+    kw.setdefault("db", str(tmp_path / "ctl" / "fleet.jsonl"))
+    kw.setdefault("ops", JOB_OPS)
+    kw.setdefault("targets", JOB_TARGETS)
+    kw.setdefault("limit", 64)
+    kw.setdefault("num_shards", 2)
+    kw.setdefault("poll_s", 0.01)
+    kw.setdefault("worker_procs", 1)
+    kw.setdefault("quiet", True)
+    return ControllerConfig(**kw)
+
+
+def _strip(db):
+    """Comparable record tuples with bookkeeping meta (provenance,
+    tuned_at) removed — the single-vs-fleet parity form."""
+    return [
+        (r.op, r.target, r.version, json.dumps(r.config, sort_keys=True),
+         r.score, r.evaluations, strip_bookkeeping(r.meta))
+        for r in db.records()
+    ]
+
+
+def _rec(op="matmul[x]", score=1.0, meta=None) -> ScheduleRecord:
+    return ScheduleRecord(
+        op=op, target="tpu_v5e", version=COST_MODEL_VERSION,
+        config={"tile": 8}, score=score, evaluations=1,
+        meta=dict(meta or {}))
+
+
+# -- crash-skip probe + lease primitives -----------------------------------
+
+class TestShardPresence:
+    def test_shared_fs(self, tmp_path):
+        base = str(tmp_path / "f.jsonl")
+        assert not fleet.shard_present(base, 0)
+        assert fleet.missing_shards(base, 2) == [0, 1]
+        fleet.touch_store(fleet.shard_store_path(base, 1))
+        assert fleet.shard_present(base, 1)
+        assert fleet.missing_shards(base, 2) == [0]
+
+    def test_transport_manifest_is_the_marker(self, tmp_path):
+        t = _mem(tmp_path)
+        base = str(tmp_path / "f.jsonl")
+        assert fleet.missing_shards(base, 2, transport=t) == [0, 1]
+        jobs = _matrix()
+        run = fleet.run_shard(jobs, 2, 0, base, transport=t, workers=1)
+        assert run.ok and run.pushed is not None
+        assert fleet.shard_present(base, 0, transport=t)
+        # the local file also exists, but with a transport configured the
+        # channel is authoritative — shard 1 never pushed
+        assert not fleet.shard_present(base, 1, transport=t)
+
+
+class TestShardLease:
+    def test_deadline_and_expiry(self):
+        lease = ShardLease(shard_id=0, jobs=3, granted_at=100.0, lease_s=5.0)
+        assert lease.deadline == 105.0
+        assert lease.last_heartbeat == 100.0
+        assert not lease.expired(now=104.9)
+        assert lease.expired(now=105.1)
+        lease.heartbeat(now=103.0)
+        assert lease.last_heartbeat == 103.0
+        # heartbeats renew liveness, never the deadline
+        assert lease.expired(now=105.1)
+
+
+class TestThreadWorker:
+    def test_exit_codes(self):
+        ok = ThreadWorker(lambda cancelled: True)
+        bad = ThreadWorker(lambda cancelled: False)
+        def _boom(cancelled):
+            raise RuntimeError("x")
+        crash = ThreadWorker(_boom)
+        deadline = time.monotonic() + 10
+        while any(w.poll() is None for w in (ok, bad, crash)):
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        assert (ok.poll(), bad.poll(), crash.poll()) == (0, 2, 1)
+
+    def test_kill_reports_minus_9_and_cancels(self):
+        started = threading.Event()
+        def _hang(cancelled):
+            started.set()
+            cancelled.wait(30)
+        w = ThreadWorker(_hang)
+        assert started.wait(10)
+        assert w.poll() is None
+        w.kill()
+        assert w.poll() == -9
+        assert w.cancelled.is_set()
+
+
+# -- the acceptance spine: heal a killed worker, converge, match single ----
+
+class TestControllerHealing:
+    def test_injected_crash_heals_and_matches_single_run(self, tmp_path):
+        """Satellite acceptance: controller on mem://, one worker dies
+        mid-shard, the shard is re-dispatched, and the final store is
+        record-for-record identical to a clean single-process run_fleet."""
+        t = _mem(tmp_path)
+        cfg = _cfg(tmp_path, transport=t, inject_crash_shard=0)
+        ctl = FleetController(cfg)
+        shard0_jobs = ctl._shard_jobs[0]
+        rc = ctl.run(exit_when_converged=True)
+        assert rc == 0 and ctl.converged and not ctl.wedged
+
+        # the crash was observed and healed exactly once
+        assert ctl.metrics.get("shards_healed_total") == 1
+        assert ctl.metrics.get("jobs_healed_total") == shard0_jobs
+        assert ctl.metrics.get("jobs_failed_total") == shard0_jobs
+        assert ctl.attempts[0] == 2 and ctl.attempts[1] == 1
+        kinds = [e["event"] for e in ctl.events if e["shard"] == 0]
+        assert kinds == ["dispatched", "failed", "healed", "dispatched",
+                        "done"]
+
+        # every job completed despite the crash
+        total = len(ctl.jobs)
+        assert ctl.metrics.get("jobs_done_total") == total
+        assert ctl.metrics.get("jobs_dispatched_total") == \
+            total + shard0_jobs
+        assert ctl.metrics.get("sync_divergence") == 0
+
+        # record-for-record parity with the clean single-process fleet
+        clean_base = str(tmp_path / "clean" / "fleet.jsonl")
+        assert fleet.run_fleet(ctl.jobs, cfg.num_shards, clean_base,
+                               workers=1).ok
+        clean = fleet.sync(clean_base, cfg.num_shards)
+        merged = ScheduleDatabase(cfg.db)
+        assert len(merged) == len(ctl.jobs)
+        assert _strip(merged) == _strip(clean.db)
+
+        # the snapshot the controller serves is that store, verbatim
+        cache = ScheduleCache.load(ctl.manager.latest_path)
+        assert cache.records() == merged.records()
+
+    def test_expired_lease_kills_and_heals(self, tmp_path):
+        """A wedged worker (no exit, no store) loses its lease: the
+        controller kills it, re-dispatches, and still converges."""
+        t = _mem(tmp_path)
+        cfg = _cfg(tmp_path, transport=t, lease_s=0.3)
+        probe = {}
+
+        def factory(shard_id, attempt):
+            if shard_id == 0 and attempt == 1:
+                def _hang(cancelled):
+                    cancelled.wait(30)
+                probe["worker"] = ThreadWorker(_hang)
+                return probe["worker"]
+            return FleetController._default_worker(ctl, shard_id, attempt)
+
+        ctl = FleetController(cfg, worker_factory=factory)
+        rc = ctl.run(exit_when_converged=True)
+        assert rc == 0 and ctl.converged
+        assert ctl.metrics.get("lease_expiries_total") == 1
+        assert ctl.metrics.get("shards_healed_total") == 1
+        assert probe["worker"].poll() == -9  # killed, cancel signalled
+        assert probe["worker"].cancelled.is_set()
+        assert len(ScheduleDatabase(cfg.db)) == len(ctl.jobs)
+
+    def test_gives_up_after_max_attempts(self, tmp_path):
+        """A shard that crashes on every dispatch is eventually abandoned:
+        the controller reports wedged/degraded instead of spinning."""
+        t = _mem(tmp_path)
+        cfg = _cfg(tmp_path, transport=t, max_attempts=2)
+
+        def factory(shard_id, attempt):
+            if shard_id == 0:
+                def _boom(cancelled):
+                    raise RuntimeError("always crashes")
+                return ThreadWorker(_boom)
+            return FleetController._default_worker(ctl, shard_id, attempt)
+
+        ctl = FleetController(cfg, worker_factory=factory)
+        rc = ctl.run(exit_when_converged=True)
+        assert rc == 1 and ctl.wedged and not ctl.converged
+        assert ctl.given_up == {0}
+        assert ctl.attempts[0] == 2
+        assert ctl.health()["status"] == "degraded"
+        # the healthy shard's records still made it into the store
+        assert len(ScheduleDatabase(cfg.db)) == ctl._shard_jobs[1]
+
+    def test_resume_skips_published_shards(self, tmp_path):
+        """A restarted controller treats published shard stores as done
+        (the store/manifest is the commit marker, as sync sees it) and
+        reconverges without re-tuning anything."""
+        t = _mem(tmp_path)
+        first = FleetController(_cfg(tmp_path, transport=t))
+        assert first.run(exit_when_converged=True) == 0
+
+        second = FleetController(_cfg(tmp_path, transport=t))
+        assert second.done == {0, 1}
+        assert second.run(exit_when_converged=True) == 0
+        assert second.converged
+        assert second.metrics.get("jobs_dispatched_total") == 0
+        resumed = [e for e in second.events if e["event"] == "resumed"]
+        assert len(resumed) == 2
+
+
+# -- HTTP API ---------------------------------------------------------------
+
+def _get(port, path):
+    with urllib.request.urlopen(
+            f"http://127.0.0.1:{port}{path}", timeout=10) as resp:
+        return resp.status, resp.read().decode("utf-8")
+
+
+def _get_err(port, path):
+    try:
+        return _get(port, path)
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode("utf-8")
+
+
+@pytest.fixture()
+def served(tmp_path):
+    """A converged controller with its HTTP API bound to an OS-chosen
+    port."""
+    t = _mem(tmp_path)
+    ctl = FleetController(_cfg(tmp_path, transport=t))
+    assert ctl.run(exit_when_converged=True) == 0
+    server = start_http(ctl)
+    try:
+        yield ctl, server.server_address[1]
+    finally:
+        server.shutdown()
+        server.server_close()
+
+
+class TestHttpApi:
+    def test_healthz(self, served):
+        ctl, port = served
+        status, body = _get(port, "/healthz")
+        assert status == 200
+        health = json.loads(body)
+        assert health["status"] == "ok" and health["converged"] is True
+        assert health["shards"]["done"] == 2
+        assert health["snapshot"]["sha1"] == ctl._snapshot_info.sha1
+        assert health["snapshot"]["built_at"] is not None
+
+    def test_metrics_exposes_acceptance_series(self, served):
+        ctl, port = served
+        status, body = _get(port, "/metrics")
+        assert status == 200
+        # the acceptance-named series, with values
+        assert f"tuna_jobs_done_total {len(ctl.jobs)}" in body
+        assert "tuna_jobs_healed_total 0" in body
+        assert "tuna_store_lag_seconds " in body
+        assert "tuna_snapshot_age_seconds " in body
+        assert "tuna_sync_divergence 0" in body
+        assert f"tuna_store_records {len(ctl.jobs)}" in body
+        assert f'sha1="{ctl._snapshot_info.sha1}"' in body
+        # age/lag gauges are live (positive once converged, never -1 here)
+        for line in body.splitlines():
+            if line.startswith(("tuna_store_lag_seconds ",
+                                "tuna_snapshot_age_seconds ")):
+                assert float(line.split()[-1]) >= 0
+        # every SPEC series renders with HELP + TYPE
+        for name, kind, _ in ControllerMetrics.SPEC:
+            assert f"# TYPE tuna_{name} {kind}" in body
+
+    def test_schedule_matches_query_json(self, served, capsys):
+        """The /schedule endpoint and `query --json` share one serializer:
+        byte-identical record objects for the same filter."""
+        ctl, port = served
+        status, body = _get(port, "/schedule?op=matmul&target=tpu_v5e")
+        assert status == 200
+        obj = json.loads(body)
+        assert obj["count"] == len(obj["records"]) > 0
+        assert obj["snapshot_sha1"] == ctl._snapshot_info.sha1
+        assert obj["cost_model_version"] == COST_MODEL_VERSION
+
+        rc = cli.main(["query", "--db", ctl.cfg.db, "--op", "matmul",
+                       "--target", "tpu_v5e", "--json"])
+        assert rc == 0
+        assert json.loads(capsys.readouterr().out) == obj["records"]
+
+    def test_schedule_no_match_is_404(self, served):
+        _, port = served
+        status, body = _get_err(port, "/schedule?op=nope%5B")
+        assert status == 404 and "no matching" in body
+
+    def test_unknown_route_is_404(self, served):
+        _, port = served
+        status, body = _get_err(port, "/nope")
+        assert status == 404 and "/schedule" in body
+
+    def test_schedule_before_first_snapshot_is_503(self, tmp_path):
+        ctl = FleetController(_cfg(tmp_path))
+        server = start_http(ctl)
+        try:
+            port = server.server_address[1]
+            status, body = _get_err(port, "/schedule?op=matmul")
+            assert status == 503 and "no snapshot" in body
+        finally:
+            server.shutdown()
+            server.server_close()
+
+
+# -- query --json (CLI satellite) ------------------------------------------
+
+class TestQueryJson:
+    def test_json_flag_emits_record_to_dict(self, tmp_path, capsys):
+        db_path = str(tmp_path / "db.jsonl")
+        db = ScheduleDatabase(db_path)
+        db.add(_rec(op="matmul[a]", score=2.0, meta={"strategy": "x"}))
+        db.add(_rec(op="matmul[b]", score=1.0))
+        assert cli.main(["query", "--db", db_path, "--json"]) == 0
+        out = json.loads(capsys.readouterr().out)
+        assert out == [record_to_dict(r) for r in db.query()]
+
+    def test_json_flag_empty_is_rc1_with_empty_array(self, tmp_path,
+                                                     capsys):
+        db_path = str(tmp_path / "db.jsonl")
+        ScheduleDatabase(db_path)
+        assert cli.main(["query", "--db", db_path, "--json"]) == 1
+        assert json.loads(capsys.readouterr().out) == []
+
+
+# -- freshness stamps (tuned_at / built_at) --------------------------------
+
+class TestFreshnessStamps:
+    def test_new_records_carry_tuned_at(self, tmp_path):
+        db = ScheduleDatabase(str(tmp_path / "db.jsonl"))
+        job = orchestrator.jobs_for(["dense_256"], ["tpu_v5e"], limit=16)[0]
+        before = time.time()
+        rec = orchestrator.run_job(job)
+        assert before - 1 <= rec.meta["tuned_at"] <= time.time() + 1
+        db.add(rec)
+        assert db.last_tuned_at() == rec.meta["tuned_at"]
+
+    def test_old_records_without_stamp_still_load_and_merge(self, tmp_path):
+        a = str(tmp_path / "a.jsonl")
+        ScheduleDatabase(a).add(_rec(op="matmul[old]", meta={"strategy":
+                                                             "x"}))
+        db = ScheduleDatabase(str(tmp_path / "b.jsonl"))
+        db.merge(a)
+        assert db.last_tuned_at() is None
+        assert db.best("matmul[old]", "tpu_v5e").meta["strategy"] == "x"
+
+    def test_tuned_at_never_decides_a_merge(self, tmp_path):
+        """Two records identical but for the wall-clock stamp tie under
+        the total order: the incumbent wins, so re-syncing a re-tuned
+        shard stays a no-op."""
+        a = str(tmp_path / "a.jsonl")
+        b = str(tmp_path / "b.jsonl")
+        ScheduleDatabase(a).add(_rec(meta={"tuned_at": 1000.0}))
+        ScheduleDatabase(b).add(_rec(meta={"tuned_at": 2000.0}))
+        db = ScheduleDatabase(str(tmp_path / "m.jsonl"))
+        db.merge(a, provenance=False)
+        assert db.merge(b, provenance=False) == 0
+        assert db.best("matmul[x]", "tpu_v5e").meta["tuned_at"] == 1000.0
+
+    def test_snapshot_built_at_roundtrip(self, tmp_path):
+        db = ScheduleDatabase(str(tmp_path / "db.jsonl"))
+        db.add(_rec())
+        path = str(tmp_path / "snap.json")
+        cache = ScheduleCache.from_db(db)
+        cache.save(path)
+        assert cache.built_at is not None
+        assert read_snapshot_header(path)["built_at"] == cache.built_at
+        assert ScheduleCache.load(path).built_at == cache.built_at
+
+    def test_built_at_outside_the_content_address(self, tmp_path):
+        """Rebuilding identical content later keeps the same sha1 — the
+        stamp must not defeat content addressing."""
+        db = ScheduleDatabase(str(tmp_path / "db.jsonl"))
+        db.add(_rec())
+        a = ScheduleCache.from_db(db)
+        a.save(str(tmp_path / "a.json"))
+        time.sleep(0.01)
+        b = ScheduleCache.from_db(db)
+        b.save(str(tmp_path / "b.json"))
+        assert a.sha1 == b.sha1
+
+    def test_old_snapshot_without_built_at_still_loads(self, tmp_path):
+        db = ScheduleDatabase(str(tmp_path / "db.jsonl"))
+        db.add(_rec())
+        path = str(tmp_path / "snap.json")
+        ScheduleCache.build(db, path)
+        with open(path, "r", encoding="utf-8") as f:
+            obj = json.load(f)
+        del obj["built_at"]  # what a pre-stamp snapshot looks like
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump(obj, f, default=float)
+        cache = ScheduleCache.load(path)
+        assert cache.built_at is None
+        assert len(cache) == 1
+
+    def test_noop_ensure_preserves_original_build_stamp(self, tmp_path):
+        db_path = str(tmp_path / "db.jsonl")
+        ScheduleDatabase(db_path).add(_rec())
+        from repro.tuna.cache import SnapshotManager
+
+        mgr = SnapshotManager(db_path, str(tmp_path / "snaps"))
+        first = mgr.ensure()
+        assert first.rebuilt and first.built_at is not None
+        time.sleep(0.02)
+        again = mgr.ensure()
+        assert not again.rebuilt
+        assert again.sha1 == first.sha1
+        assert again.built_at == first.built_at

@@ -16,7 +16,7 @@ import pytest
 
 from repro.tuna import fleet, orchestrator
 from repro.tuna.cache import ScheduleCache
-from repro.tuna.db import ScheduleDatabase, ScheduleRecord
+from repro.tuna.db import ScheduleDatabase, ScheduleRecord, strip_bookkeeping
 from repro.tuna.orchestrator import TuneJob
 
 # ops × targets × strategies; dense_256@tpu_v5e appears under both
@@ -33,11 +33,10 @@ def _matrix():
 
 
 def _strip(db):
-    """Best records as comparable tuples, provenance removed."""
+    """Best records as comparable tuples, bookkeeping meta removed."""
     return [
         (r.op, r.target, r.version, json.dumps(r.config, sort_keys=True),
-         r.score, r.evaluations,
-         {k: v for k, v in r.meta.items() if k != "provenance"})
+         r.score, r.evaluations, strip_bookkeeping(r.meta))
         for r in db.records()
     ]
 
