@@ -17,6 +17,7 @@ from typing import Dict
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import tuner
 from repro.core.spaces import MatmulSpace
 from repro.core.tuner import _score_config, tune
 from repro.hw import get_target
@@ -33,6 +34,10 @@ def compile_time_comparison(M=512, N=512, K=512, n_configs: int = 16,
     space = MatmulSpace(M, N, K, 4, target_kind="cpu")
     cfgs = sample_space(space, n_configs, seed)
 
+    # every timed section starts from cold block-spec memos: sample_space /
+    # earlier benchmark phases in the same process may have warmed the lru
+    # caches, which would flatter static_s against dynamic_s
+    tuner._clear_memos()
     t0 = time.perf_counter()
     for cfg in cfgs:
         _score_config(space, target, cfg)
@@ -41,6 +46,7 @@ def compile_time_comparison(M=512, N=512, K=512, n_configs: int = 16,
     rng = np.random.default_rng(seed)
     a = jnp.array(rng.standard_normal((M, K)), jnp.float32)
     b = jnp.array(rng.standard_normal((K, N)), jnp.float32)
+    tuner._clear_memos()
     t0 = time.perf_counter()
     for cfg in cfgs:
         measure_config(M, N, K, cfg, a, b, iters=iters)
@@ -48,6 +54,7 @@ def compile_time_comparison(M=512, N=512, K=512, n_configs: int = 16,
 
     # ES-driven search budget (the deployed flow) for reference; db=False so
     # a warm default store can't short-circuit the search being timed
+    tuner._clear_memos()
     t0 = time.perf_counter()
     tune(space, target, iterations=8, population=12, db=False)
     es_s = time.perf_counter() - t0

@@ -39,6 +39,7 @@ from repro.hw.target import HardwareTarget
 _UNSET = object()
 _DEFAULT_DB = _UNSET  # _UNSET = fall back to $REPRO_TUNA_DB; None = off
 _DEFAULT_CACHE = _UNSET  # _UNSET = fall back to $REPRO_TUNA_CACHE
+_DEFAULT_BUNDLE = _UNSET  # _UNSET = fall back to $REPRO_TUNA_BUNDLE
 _DEFAULT_CACHE_PATH: Optional[str] = None  # where the default snapshot was
 #                                   installed from — what hot reload rechecks
 _PATH_DBS: Dict[str, object] = {}  # abspath -> ScheduleDatabase (one load
@@ -172,12 +173,18 @@ def get_default_cache():
                 _DEFAULT_CACHE = _open_cache(path)
             except FileNotFoundError:
                 _DEFAULT_CACHE = None  # not built yet; refresh may find it
+                _clear_memos()
             except StaleSnapshotError as e:
                 import warnings
 
                 warnings.warn(f"$REPRO_TUNA_CACHE disabled: {e}",
                               StaleSnapshotWarning, stacklevel=2)
                 _DEFAULT_CACHE = None
+                # degrading to OFF changes what every block-spec lookup
+                # resolves to — without this, shapes memoised while an
+                # earlier (now-rejected) snapshot was installed keep
+                # serving its block specs until process restart
+                _clear_memos()
     return _DEFAULT_CACHE
 
 
@@ -210,10 +217,63 @@ def refresh_default_cache() -> bool:
     return True
 
 
+def set_default_bundle(bundle) -> None:
+    """Install the process-wide golden kernel bundle
+    (``repro.tuna.golden.KernelBundle``, or a path/`latest` pointer to
+    one), consulted before the snapshot cache *and* the DB on every read —
+    the blessed-release tier. ``None`` switches it OFF, including the
+    ``$REPRO_TUNA_BUNDLE`` fallback. Clears the block-spec memo caches so
+    already-traced shapes re-resolve against the release."""
+    global _DEFAULT_BUNDLE
+    if isinstance(bundle, (str, os.PathLike)):
+        from repro.tuna.golden import KernelBundle
+
+        bundle = KernelBundle.load(bundle)
+    _DEFAULT_BUNDLE = bundle
+    _clear_memos()
+
+
+def get_default_bundle():
+    """The installed kernel bundle, else one loaded from
+    ``$REPRO_TUNA_BUNDLE``. Mirrors ``get_default_cache``'s env handling:
+    a path that does not exist resolves to OFF; a stale bundle (different
+    ``COST_MODEL_VERSION``) resolves to OFF with a ``StaleSnapshotWarning``
+    — and both degrade paths clear the block-spec memos."""
+    global _DEFAULT_BUNDLE
+    if _DEFAULT_BUNDLE is _UNSET:
+        path = os.environ.get("REPRO_TUNA_BUNDLE")
+        if not path:
+            _DEFAULT_BUNDLE = None
+        else:
+            from repro.tuna.cache import (StaleSnapshotError,
+                                          StaleSnapshotWarning)
+            from repro.tuna.golden import KernelBundle
+
+            try:
+                _DEFAULT_BUNDLE = KernelBundle.load(path)
+            except FileNotFoundError:
+                _DEFAULT_BUNDLE = None
+                _clear_memos()
+            except StaleSnapshotError as e:
+                import warnings
+
+                warnings.warn(f"$REPRO_TUNA_BUNDLE disabled: {e}",
+                              StaleSnapshotWarning, stacklevel=2)
+                _DEFAULT_BUNDLE = None
+                _clear_memos()
+    return _DEFAULT_BUNDLE
+
+
 def _lookup(op: str, target_name: str, version: str, db):
-    """Read path shared by tune/best_schedule/block-spec pickers: snapshot
-    cache first (O(1), lock-free), then the schedule DB. Returns
-    ``(record or None, "cache"|"db"|"")`` and never searches."""
+    """Read path shared by tune/best_schedule/block-spec pickers: golden
+    kernel bundle first (the blessed release), then the snapshot cache
+    (O(1), lock-free), then the schedule DB. Returns
+    ``(record or None, "bundle"|"cache"|"db"|"")`` and never searches."""
+    bundle = get_default_bundle()
+    if bundle is not None:
+        rec = bundle.best(op, target_name, version)
+        if rec is not None:
+            return rec, "bundle"
     cache = get_default_cache()
     if cache is not None:
         rec = cache.best(op, target_name, version)
@@ -293,7 +353,7 @@ def tune(
                 default_score=float(
                     rec.meta.get("default_score", float("nan"))),
                 from_db=True,
-                from_cache=source == "cache",
+                from_cache=source in ("cache", "bundle"),
             )
 
     store = resolve_db(db)  # resolved on the miss path only: a snapshot

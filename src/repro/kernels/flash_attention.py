@@ -22,6 +22,10 @@ from repro.kernels.pallas_compat import compiler_params
 
 _NEG_INF = -1e30
 
+# Pallas trace counter (see kernels/matmul.py TRACE_COUNT): flat when the
+# call was served by an AOT kernel-bundle executable instead of tracing.
+TRACE_COUNT = 0
+
 
 def _flash_kernel(
     q_ref,  # [1, block_q, d]
@@ -97,6 +101,8 @@ def flash_attention_pallas(
     block_k: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
+    global TRACE_COUNT
+    TRACE_COUNT += 1
     b, hq, s, d = q.shape
     hkv = k.shape[1]
     assert hq % hkv == 0, (hq, hkv)

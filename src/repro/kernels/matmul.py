@@ -17,6 +17,13 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pallas_compat import compiler_params
 
+# Pallas trace counter: bumped every time matmul_pallas builds the kernel
+# (eager interpret run or inside a jit trace). An AOT-deserialized
+# executable from a kernel bundle never re-enters this function, so
+# "cold start pays zero Pallas compilations" is assertable as TRACE_COUNT
+# staying flat — see kernels.ops.pallas_trace_counts.
+TRACE_COUNT = 0
+
 
 def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int):
     @pl.when(pl.program_id(2) == 0)
@@ -42,6 +49,8 @@ def matmul_pallas(
     interpret: bool = False,
 ) -> jax.Array:
     """C[M,N] = A[M,K] @ B[K,N] (f32 accumulation, output in x.dtype)."""
+    global TRACE_COUNT
+    TRACE_COUNT += 1
     m, k = x.shape
     k2, n = y.shape
     assert k == k2, (x.shape, y.shape)

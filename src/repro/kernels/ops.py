@@ -9,16 +9,26 @@ jnp reference paths:
 
 Tuning happens at trace time via ``core.tuner`` — pure static analysis, no
 device execution, memoised per shape (the paper's compilation-service flow).
-Both block-spec pickers consult the serving snapshot cache
-(``use_schedule_cache(path)`` or ``$REPRO_TUNA_CACHE``) and then the warm
-``repro.tuna`` schedule DB (``use_schedule_db(path)`` or
+Both block-spec pickers consult the golden kernel bundle first
+(``use_kernel_bundle(path)`` or ``$REPRO_TUNA_BUNDLE``), then the serving
+snapshot cache (``use_schedule_cache(path)`` or ``$REPRO_TUNA_CACHE``), and
+then the warm ``repro.tuna`` schedule DB (``use_schedule_db(path)`` or
 ``$REPRO_TUNA_DB``): on a warm store, trace time pays a dict lookup, not a
 search.
+
+A loaded kernel bundle serves more than block specs: a Pallas-path call on
+*concrete* arrays whose (kernel, shapes, dtype, semantic knobs) match a
+bundled AOT executable skips trace+lower+compile entirely and runs the
+deserialized executable — zero Pallas compilations at serve cold-start
+(``pallas_trace_counts`` is the witness; ``benchmarks/cold_start.py``
+measures it). Calls under an outer ``jit`` see tracers and fall through to
+the ordinary trace path — an AOT executable cannot be inlined into someone
+else's trace.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +38,8 @@ from repro.core.tuner import rank_space, tuned_matmul_blocks
 from repro.core.spaces import MatmulSpace
 from repro.hw import get_target
 from repro.kernels import ref
+from repro.kernels import flash_attention as _flash_mod
+from repro.kernels import matmul as _matmul_mod
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.matmul import matmul_pallas
 
@@ -52,6 +64,49 @@ def refresh_schedule_cache() -> bool:
     by the snapshot's content digest, not file stat). Clears the block-spec
     memos on swap so already-traced shapes re-resolve; True iff swapped."""
     return tuner.refresh_default_cache()
+
+
+def use_kernel_bundle(bundle) -> None:
+    """Install a golden kernel bundle (``python -m repro.tuna golden
+    --bundle``): a path (or ``latest`` pointer), a loaded
+    ``repro.tuna.golden.KernelBundle``, or ``None`` to switch OFF. The
+    bundle becomes the first schedule-lookup tier (before snapshot cache
+    and DB), and Pallas-path calls on concrete arrays matching a bundled
+    executable run ahead-of-time compiled code — no trace, no compile."""
+    tuner.set_default_bundle(bundle)  # clears all block-spec memos
+
+
+def get_kernel_bundle():
+    """The installed ``KernelBundle`` (or None) — resolved through
+    ``core.tuner`` so there is exactly one process-wide bundle."""
+    return tuner.get_default_bundle()
+
+
+def pallas_trace_counts() -> Dict[str, int]:
+    """How many times each Pallas kernel family has been traced/built in
+    this process — the zero-compile acceptance witness for bundled serving
+    (an AOT executable served from the bundle never re-enters the kernel
+    builders, so these stay flat)."""
+    return {"matmul": _matmul_mod.TRACE_COUNT,
+            "flash": _flash_mod.TRACE_COUNT}
+
+
+def reset_pallas_trace_counts() -> None:
+    _matmul_mod.TRACE_COUNT = 0
+    _flash_mod.TRACE_COUNT = 0
+
+
+def _bundle_executable(kernel: str, args, params: Optional[Dict] = None):
+    """The installed bundle's AOT executable for this concrete call, or
+    None. Tracers (an outer jit's abstract values) always miss: a
+    serialized executable is a leaf computation, callable only on real
+    arrays from op-by-op dispatch."""
+    bundle = tuner.get_default_bundle()
+    if bundle is None:
+        return None
+    if any(isinstance(a, jax.core.Tracer) for a in args):
+        return None
+    return bundle.executable(kernel, args, params)
 
 
 @functools.lru_cache(maxsize=256)
@@ -123,6 +178,9 @@ def matmul(
     if not use_pallas:
         return ref.matmul(x, y)
     if blocks is None:
+        fn = _bundle_executable("matmul", (x, y))
+        if fn is not None:
+            return fn(x, y)
         blocks = tuned_matmul_blocks(m, n, k, x.dtype.itemsize)
     bm, bn, bk = blocks
     return matmul_pallas(
@@ -146,6 +204,12 @@ def attention(
         return ref.attention(q, k, v, causal=causal, scale=scale)
     s, d = q.shape[-2], q.shape[-1]
     if blocks is None:
+        fn = _bundle_executable(
+            "flash", (q, k, v),
+            {"causal": causal,
+             "scale": scale if scale is not None else d ** -0.5})
+        if fn is not None:
+            return fn(q, k, v)
         blocks = tuned_flash_blocks(s, d, q.dtype.itemsize)
     bq, bk = blocks
     return flash_attention_pallas(

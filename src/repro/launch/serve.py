@@ -167,6 +167,12 @@ def main() -> None:
     ap.add_argument("--no-schedule-refresh", action="store_true",
                     help="do not poll the snapshot while serving (pin the "
                          "instance loaded at startup)")
+    ap.add_argument("--kernel-bundle", default=None,
+                    help="golden AOT kernel bundle (python -m repro.tuna "
+                         "golden --bundle, or its `latest` pointer): the "
+                         "first schedule-lookup tier, plus ahead-of-time "
+                         "compiled executables so cold start performs zero "
+                         "Pallas compilations for bundled kernels")
     args = ap.parse_args()
 
     if args.schedule_db:
@@ -177,6 +183,13 @@ def main() -> None:
         from repro.kernels.ops import use_schedule_cache
 
         use_schedule_cache(args.schedule_cache)
+    if args.kernel_bundle:
+        from repro.kernels.ops import use_kernel_bundle
+
+        use_kernel_bundle(args.kernel_bundle)
+        from repro.core import tuner as _tuner
+
+        print(f"[serve] kernel bundle: {_tuner.get_default_bundle().describe()}")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -230,6 +243,16 @@ def main() -> None:
             print(f"[serve] schedule cache: {cache.hits} hits / "
                   f"{cache.misses} misses ({len(cache)} records, "
                   f"{stats['cache_reloads']} hot reloads)")
+    if args.kernel_bundle:
+        from repro.core import tuner
+        from repro.kernels.ops import pallas_trace_counts
+
+        bundle = tuner.get_default_bundle()
+        traces = pallas_trace_counts()
+        print(f"[serve] kernel bundle: {bundle.hits} schedule hits, "
+              f"{bundle.exec_hits} AOT executable hits / "
+              f"{bundle.exec_misses} misses; pallas traces this process: "
+              f"matmul={traces['matmul']} flash={traces['flash']}")
 
 
 if __name__ == "__main__":

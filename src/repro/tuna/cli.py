@@ -22,8 +22,19 @@ Subcommands:
            heal crashes/expiries, sync + verify, republish snapshots, and
            serve GET /schedule /healthz /metrics (Prometheus text) —
            see repro.tuna.controller
-  compact  rewrite the log keeping only the best record per key
-  export   dump best records as a JSON array
+  golden   freeze the store into a blessed, content-addressed golden
+           release per (target, cost-model version), regression-gated
+           against the previous golden (--waive records explicit
+           exceptions in the manifest); --bundle AOT-compiles every
+           scheduled Pallas kernel into a serialized-executable bundle
+           (serve cold-start skips compilation); --publish ships both
+           over a transport — see repro.tuna.golden
+  compact  rewrite the log keeping only the best record per key;
+           --transport pulls the fleet's shard stores first (then pushes
+           the compacted store back); bare per-shard siblings on disk are
+           a fail-fast error unless --ignore-shards
+  export   dump best records as a JSON array (same --transport/shard
+           discipline as compact)
 
 Transports (see repro.tuna.transport): dir:///path (or a bare path) is a
 directory bucket; mem://name is the in-process test channel.
@@ -47,6 +58,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from typing import List, Optional
 
@@ -291,15 +303,152 @@ def cmd_controller(args: argparse.Namespace) -> int:
     return rc
 
 
+def cmd_golden(args: argparse.Namespace) -> int:
+    from repro.core.cost_model import COST_MODEL_VERSION
+    from repro.tuna.golden import (
+        GoldenError,
+        GoldenManager,
+        GoldenRegressionError,
+        build_kernel_bundle,
+    )
+
+    if args.snapshot:
+        from repro.tuna.cache import ScheduleCache, StaleSnapshotError
+
+        try:
+            store = ScheduleCache.load(args.snapshot)
+        except StaleSnapshotError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 1
+        source = args.snapshot
+    else:
+        store = ScheduleDatabase(args.db)
+        source = args.db
+    records = store.records()
+    if args.targets == "all":
+        targets = sorted({r.target for r in records
+                          if r.version == COST_MODEL_VERSION})
+    else:
+        targets = _csv(args.targets)
+    if not targets:
+        print(f"error: {source}: no records under cost-model version "
+              f"{COST_MODEL_VERSION!r} — tune first", file=sys.stderr)
+        return 2
+    mgr = GoldenManager(args.dir)
+    rc = 0
+    for target in targets:
+        try:
+            info = mgr.promote(records, target, waive=args.waive or (),
+                               force=args.force, source=source)
+        except GoldenRegressionError as e:
+            print(f"[tuna] REFUSED golden promotion for {target}: {e}",
+                  file=sys.stderr)
+            rc = 1
+            continue
+        except GoldenError as e:
+            print(f"error: {e}", file=sys.stderr)
+            rc = rc or 2
+            continue
+        state = "promoted" if info.rebuilt else "up to date"
+        gate = (f"gated against {info.predecessor}, "
+                f"{info.gated_against} schedules checked"
+                if info.predecessor else "first release in this lineage")
+        print(f"[tuna] golden {info.name}: {info.count} schedules "
+              f"({state}; {gate}; latest -> {info.name})")
+        for w in info.waived:
+            print(f"[tuna]   WAIVED (--waive {w.waived_by!r}): "
+                  f"{w.describe()}", file=sys.stderr)
+        bundle = None
+        if args.bundle:
+            _, release = mgr.load_release(info.path)
+            bundle = build_kernel_bundle(release, args.dir, target,
+                                         golden_name=info.name)
+            print(f"[tuna] bundle {bundle.name}: {bundle.entries} AOT "
+                  f"kernel(s) over {bundle.schedules} schedules")
+            for op, why in bundle.skipped:
+                print(f"[tuna]   no AOT kernel for {op}: {why}")
+        if args.publish:
+            from repro.tuna.transport import resolve_transport
+
+            t = resolve_transport(args.publish)
+            for man in mgr.publish(t, info, bundle=bundle):
+                print(f"[tuna] published {man.name} ({man.size}B, "
+                      f"sha1 {man.sha1[:12]}) -> {t.describe()}")
+    return rc
+
+
+def _shard_siblings(db_path: str) -> List[str]:
+    """Per-shard stores sitting next to a base store on disk
+    (``db.jsonl`` -> ``db.shardNN.jsonl``), the layout ``tune
+    --num-shards`` writes."""
+    import glob
+
+    root, ext = os.path.splitext(os.fspath(db_path))
+    return sorted(glob.glob(f"{root}.shard[0-9][0-9]{ext or '.jsonl'}"))
+
+
+def _pull_fleet_or_fail(args: argparse.Namespace, cmd: str) -> int:
+    """Whole-store guard shared by compact/export: both commands claim to
+    operate on *the* store, so running them against the base file while a
+    fleet publishes per-shard stores silently works on a stale partial
+    copy. With --transport, pull + merge every published shard first
+    (sync's verified path); otherwise refuse when shard siblings exist on
+    disk, unless the operator says --ignore-shards."""
+    if args.transport:
+        if not args.num_shards:
+            print(f"error: {cmd} --transport needs --num-shards to know "
+                  f"which shard stores to pull", file=sys.stderr)
+            return 2
+        from repro.tuna import fleet
+
+        rep = fleet.sync(args.db, args.num_shards, compact=False,
+                         transport=args.transport,
+                         staging_dir=args.staging_dir)
+        for name in rep.pulled:
+            print(f"[tuna] pulled {name} (verified)")
+        for path in rep.skipped:
+            print(f"[tuna] WARNING: shard store {path} not published yet "
+                  f"(skipped) — the {cmd} covers a partial fleet",
+                  file=sys.stderr)
+        return 0
+    shards = _shard_siblings(args.db)
+    if shards and not args.ignore_shards:
+        print(f"error: {args.db} has {len(shards)} per-shard store(s) "
+              f"next to it ({', '.join(os.path.basename(s) for s in shards)}) "
+              f"— {cmd}ing only the base store would operate on a stale "
+              f"partial copy. Run `python -m repro.tuna sync --db {args.db} "
+              f"--num-shards N` first, pass --transport to pull the fleet's "
+              f"shards here, or pass --ignore-shards to {cmd} just the "
+              f"base store anyway", file=sys.stderr)
+        return 2
+    return 0
+
+
 def cmd_compact(args: argparse.Namespace) -> int:
+    rc = _pull_fleet_or_fail(args, "compact")
+    if rc:
+        return rc
     db = ScheduleDatabase(args.db)
     dropped = db.compact()
     print(f"[tuna] compacted {args.db}: {len(db)} keys kept, "
           f"{dropped} superseded lines dropped")
+    if args.transport:
+        from repro.tuna.transport import resolve_transport
+
+        # push the compacted store back under its base name: the channel's
+        # authoritative merged object for downstream pulls (sync only ever
+        # pulls shard-named objects, so this can't shadow a shard store)
+        t = resolve_transport(args.transport)
+        man = t.push(args.db, os.path.basename(args.db))
+        print(f"[tuna] pushed {man.name} ({man.records} records, "
+              f"sha1 {man.sha1[:12]}) -> {t.describe()}")
     return 0
 
 
 def cmd_export(args: argparse.Namespace) -> int:
+    rc = _pull_fleet_or_fail(args, "export")
+    if rc:
+        return rc
     db = ScheduleDatabase(args.db)
     n = db.export(args.out)
     print(f"[tuna] exported {n} records -> {args.out}")
@@ -451,13 +600,70 @@ def build_parser() -> argparse.ArgumentParser:
                         "dies before publishing (CI heal check)")
     p.set_defaults(fn=cmd_controller)
 
+    p = sub.add_parser(
+        "golden",
+        help="freeze the store into a regression-gated golden release "
+             "(+ optional AOT kernel bundle)")
+    p.add_argument("--db", default=DEFAULT_DB)
+    p.add_argument("--snapshot", default=None,
+                   help="promote from a compiled snapshot (or `latest` "
+                        "pointer) instead of the JSONL DB")
+    p.add_argument("--dir", default="experiments/golden", metavar="OUT_DIR",
+                   help="golden release directory: versioned releases "
+                        "(golden.<target>.<cm-version>-<digest>.json) plus "
+                        "a per-target `latest` pointer")
+    p.add_argument("--targets", default="all",
+                   help="comma-separated targets to promote, or 'all' "
+                        "(every target present in the store for the "
+                        "current cost-model version)")
+    p.add_argument("--waive", action="append", default=None,
+                   metavar="OP[@TARGET]",
+                   help="accept a specific regression vs the previous "
+                        "golden; repeatable, recorded in the release "
+                        "manifest")
+    p.add_argument("--force", action="store_true",
+                   help="rewrite the release file even if its "
+                        "content-addressed name already exists")
+    p.add_argument("--bundle", action="store_true",
+                   help="AOT-compile every scheduled Pallas kernel in the "
+                        "release into a serialized-executable bundle "
+                        "(bundle.<target>.<cm-version>-<digest>.json) — "
+                        "what `launch/serve.py --kernel-bundle` loads")
+    p.add_argument("--publish", default=None, metavar="SPEC",
+                   help="push the release (+ bundle) and their `latest` "
+                        "pointers over this transport")
+    p.set_defaults(fn=cmd_golden)
+
     p = sub.add_parser("compact", help="drop superseded log lines")
     p.add_argument("--db", default=DEFAULT_DB)
+    p.add_argument("--transport", default=None, metavar="SPEC",
+                   help="pull the fleet's published shard stores (needs "
+                        "--num-shards) and merge them before compacting, "
+                        "then push the compacted store back under its "
+                        "base name")
+    p.add_argument("--num-shards", type=int, default=0,
+                   help="fleet size for --transport pulls")
+    p.add_argument("--staging-dir", default=None,
+                   help="where transport pulls land (default <db>.staging/)")
+    p.add_argument("--ignore-shards", action="store_true",
+                   help="compact just the base store even when per-shard "
+                        "stores sit next to it (default: fail fast — the "
+                        "base alone is a stale partial copy)")
     p.set_defaults(fn=cmd_compact)
 
     p = sub.add_parser("export", help="dump best records as JSON")
     p.add_argument("--db", default=DEFAULT_DB)
     p.add_argument("--out", default="experiments/schedule_db.json")
+    p.add_argument("--transport", default=None, metavar="SPEC",
+                   help="pull the fleet's published shard stores (needs "
+                        "--num-shards) and merge them before exporting")
+    p.add_argument("--num-shards", type=int, default=0,
+                   help="fleet size for --transport pulls")
+    p.add_argument("--staging-dir", default=None,
+                   help="where transport pulls land (default <db>.staging/)")
+    p.add_argument("--ignore-shards", action="store_true",
+                   help="export just the base store even when per-shard "
+                        "stores sit next to it (default: fail fast)")
     p.set_defaults(fn=cmd_export)
     return ap
 

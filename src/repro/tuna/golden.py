@@ -1,0 +1,723 @@
+"""Golden schedule releases + ahead-of-time compiled kernel bundles.
+
+The MITuna promotion model: a tuned store is a *moving* target — the fleet
+appends to it continuously — so nothing downstream should trust "whatever
+the store says today". A **golden release** freezes the best-record set for
+one ``(target, cost-model version)`` into a content-addressed artifact that
+is *blessed* by a regression gate: promotion fails if any (op, target)
+schedule scores worse under the cost model than the previous golden (or
+vanished from the store), unless the regression is explicitly ``--waive``d
+— and every waiver is recorded in the release manifest, so an audit of a
+release always answers "who accepted this getting slower, and from what to
+what". This mirrors MITuna's ``populate_golden`` versioned find/fast DBs,
+with the TPU learned-performance-model lesson baked in: gate a release
+against its predecessor *before* anything serves it.
+
+From a golden release, :func:`build_kernel_bundle` ahead-of-time lowers and
+compiles every scheduled Pallas kernel (``kernels/matmul.py``,
+``kernels/flash_attention.py``) via ``jax.jit(...).lower(...).compile()``
+and serializes the executables (``jax.experimental.serialize_executable``)
+into a **kernel bundle** — one manifest-verified JSON artifact, shippable
+over the existing ``repro.tuna.transport`` channels. A serve process that
+loads the bundle (``launch/serve.py --kernel-bundle``, or
+``kernels.ops.use_kernel_bundle``) dispatches bundled kernel calls straight
+to the deserialized executable: **zero Pallas traces, zero compiles** at
+cold start — ``benchmarks/compile_time.py``'s Table II metric driven to a
+dictionary probe. The bundle also embeds the full golden schedule set, so
+``core.tuner`` gains a bundle-first lookup tier (bundle → snapshot cache →
+DB → cost model) and a bundle alone serves block-spec picks with no
+snapshot or store attached.
+
+Like the rest of ``repro.tuna``, this module imports no jax at module
+scope — promotion and the regression gate run anywhere; only bundle
+*building* and executable *loading* touch jax (lazily).
+"""
+from __future__ import annotations
+
+import base64
+import dataclasses
+import hashlib
+import json
+import os
+import re
+import tempfile
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.cost_model import COST_MODEL_VERSION
+from repro.tuna.cache import (
+    StaleSnapshotError,
+    _payload,
+    read_snapshot_header,
+)
+from repro.tuna.db import Key, ScheduleRecord, record_beats
+
+GOLDEN_SCHEMA = "tuna-golden-v1"
+GOLDEN_POINTER_SCHEMA = "tuna-golden-pointer-v1"
+BUNDLE_SCHEMA = "tuna-kernel-bundle-v1"
+BUNDLE_POINTER_SCHEMA = "tuna-bundle-pointer-v1"
+
+# dtype_bytes in an op signature -> concrete dtype the AOT executable is
+# compiled for (the same widths the spaces/tuner use throughout)
+_DTYPE_BY_BYTES = {2: "bfloat16", 4: "float32"}
+
+
+class GoldenError(RuntimeError):
+    """A golden release operation failed (bad artifact, no records)."""
+
+
+class BundleError(RuntimeError):
+    """A kernel bundle failed to load or verify (corrupt payload, wrong
+    backend/schema) — never serve executables out of it."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Regression:
+    """One schedule that got worse (or vanished) vs the previous golden."""
+
+    op: str
+    target: str
+    version: str
+    kind: str                      # "slower" | "lost"
+    old_score: float
+    new_score: Optional[float] = None   # None when kind == "lost"
+    waived_by: Optional[str] = None     # the --waive spec that accepted it
+
+    @property
+    def key(self) -> Key:
+        return (self.op, self.target, self.version)
+
+    def describe(self) -> str:
+        if self.kind == "lost":
+            return (f"{self.op} @ {self.target}: present in the previous "
+                    f"golden (score {self.old_score:.3e}) but missing from "
+                    f"the candidate — lost coverage")
+        return (f"{self.op} @ {self.target}: score regressed "
+                f"{self.old_score:.3e} -> {self.new_score:.3e} "
+                f"({self.new_score / max(self.old_score, 1e-300):.3f}x)")
+
+
+class GoldenRegressionError(GoldenError):
+    """Promotion refused: schedules regressed vs the previous golden and
+    were not waived. ``.regressions`` lists every blocking one."""
+
+    def __init__(self, regressions: Sequence[Regression]):
+        self.regressions = list(regressions)
+        lines = "\n".join(f"  {r.describe()}" for r in self.regressions)
+        super().__init__(
+            f"{len(self.regressions)} schedule(s) regress vs the previous "
+            f"golden release:\n{lines}\n"
+            f"Fix the store (or the cost model), or accept explicitly with "
+            f"--waive 'OP[@TARGET]' per regression — waivers are recorded "
+            f"in the release manifest.")
+
+
+def find_regressions(new_index: Dict[Key, ScheduleRecord],
+                     old_records: Iterable[ScheduleRecord],
+                     ) -> List[Regression]:
+    """Gate a candidate best-record index against the previous golden's
+    records: every key the old release blessed must still exist and must
+    not score worse (scores are pure cost-model outputs — deterministic —
+    so the comparison is exact, no tolerance band). New keys are always
+    welcome; they had no blessed predecessor to regress from."""
+    out: List[Regression] = []
+    for old in old_records:
+        new = new_index.get(old.key)
+        if new is None:
+            out.append(Regression(op=old.op, target=old.target,
+                                  version=old.version, kind="lost",
+                                  old_score=old.score))
+        elif new.score > old.score:
+            out.append(Regression(op=old.op, target=old.target,
+                                  version=old.version, kind="slower",
+                                  old_score=old.score, new_score=new.score))
+    return out
+
+
+def waiver_matches(spec: str, reg: Regression) -> bool:
+    """``--waive`` spec semantics: ``OP`` (exact op signature, every
+    target) or ``OP@TARGET`` (one key). No globs — a waiver is a deliberate
+    per-schedule exception, not a blanket."""
+    if spec == reg.op:
+        return True
+    return spec == f"{reg.op}@{reg.target}"
+
+
+@dataclasses.dataclass
+class GoldenInfo:
+    """What ``GoldenManager.promote`` did."""
+
+    name: str
+    path: str
+    latest: str
+    target: str
+    sha1: str
+    count: int
+    rebuilt: bool
+    repointed: bool
+    predecessor: Optional[str]          # previous golden release name
+    waived: List[Regression] = dataclasses.field(default_factory=list)
+    gated_against: int = 0              # predecessor records checked
+
+
+class GoldenManager:
+    """Lifecycle of golden releases in a directory, one lineage per
+    ``(target, COST_MODEL_VERSION)``.
+
+    Names are content-addressed like snapshots
+    (``golden.<target>.<cm-version>-<digest>.json``) with an atomic
+    ``golden.<target>.latest.json`` pointer per target. A cost-model bump
+    starts a fresh lineage: the first promotion under a new
+    ``COST_MODEL_VERSION`` has no predecessor to regress from (old scores
+    are not comparable), exactly like snapshot staleness."""
+
+    def __init__(self, out_dir: str, prefix: str = "golden"):
+        self.out_dir = os.fspath(out_dir)
+        self.prefix = prefix
+
+    # -- naming -----------------------------------------------------------
+
+    def latest_path(self, target: str) -> str:
+        return os.path.join(self.out_dir,
+                            f"{self.prefix}.{target}.latest.json")
+
+    def release_name(self, target: str, sha1: str) -> str:
+        return f"{self.prefix}.{target}.{COST_MODEL_VERSION}-{sha1[:12]}.json"
+
+    def bundle_name(self, target: str, sha1: str) -> str:
+        return f"bundle.{target}.{COST_MODEL_VERSION}-{sha1[:12]}.json"
+
+    def bundle_latest_path(self, target: str) -> str:
+        return os.path.join(self.out_dir, f"bundle.{target}.latest.json")
+
+    # -- reads ------------------------------------------------------------
+
+    def current(self, target: str) -> Optional[Dict]:
+        """Header of the release the ``latest`` pointer names, or None."""
+        try:
+            ptr = read_snapshot_header(self.latest_path(target))
+        except (FileNotFoundError, ValueError):
+            return None
+        if ptr.get("schema") != GOLDEN_POINTER_SCHEMA:
+            return None
+        return ptr
+
+    def load_release(self, path: str,
+                     ) -> Tuple[Dict, List[ScheduleRecord]]:
+        """Load + verify a golden release file (follows a ``latest``
+        pointer): returns ``(header, records)``. Digest verification uses
+        the same canonical payload as snapshots — a torn transport copy
+        fails loudly here, never at the regression gate."""
+        path = os.fspath(path)
+        with open(path, "r", encoding="utf-8") as f:
+            obj = json.load(f)
+        if isinstance(obj, dict) and \
+                obj.get("schema") == GOLDEN_POINTER_SCHEMA:
+            target = os.path.join(os.path.dirname(os.path.abspath(path)),
+                                  obj["release"])
+            return self.load_release(target)
+        if not isinstance(obj, dict) or obj.get("schema") != GOLDEN_SCHEMA:
+            schema = obj.get("schema") if isinstance(obj, dict) else None
+            raise GoldenError(f"{path}: not a golden release "
+                              f"(schema={schema!r}, want {GOLDEN_SCHEMA!r})")
+        digest = hashlib.sha1(_payload(obj["records"]).encode()).hexdigest()
+        if digest != obj.get("sha1"):
+            raise GoldenError(
+                f"{path}: golden release digest mismatch (corrupt or torn "
+                f"copy); re-promote with `python -m repro.tuna golden`")
+        records = [ScheduleRecord.from_dict(r) for r in obj["records"]]
+        return obj, records
+
+    def previous(self, target: str,
+                 ) -> Tuple[Optional[Dict], List[ScheduleRecord]]:
+        """The predecessor release for this target *and* cost-model
+        version — a pointer naming a release from another cost-model
+        lineage yields no predecessor (scores are not comparable across
+        versions, so there is nothing to gate against)."""
+        ptr = self.current(target)
+        if ptr is None or ptr.get("cost_model_version") != COST_MODEL_VERSION:
+            return None, []
+        try:
+            return self.load_release(
+                os.path.join(self.out_dir, ptr["release"]))
+        except FileNotFoundError:
+            return None, []
+
+    # -- promotion --------------------------------------------------------
+
+    def promote(self, records: Sequence[ScheduleRecord], target: str,
+                waive: Sequence[str] = (), force: bool = False,
+                source: str = "") -> GoldenInfo:
+        """Freeze the best records for ``(target, COST_MODEL_VERSION)``
+        into a golden release, gated against the previous golden.
+
+        ``records`` may span targets/versions — only matching ones
+        participate. Raises :class:`GoldenRegressionError` when any
+        schedule regresses (slower score, or lost coverage) and no
+        ``waive`` spec covers it; waived regressions are recorded in the
+        release manifest. Re-promoting identical content is a no-op
+        (content-addressed, like ``SnapshotManager.ensure``)."""
+        index: Dict[Key, ScheduleRecord] = {}
+        for rec in records:
+            if rec.target != target or rec.version != COST_MODEL_VERSION:
+                continue
+            cur = index.get(rec.key)
+            if cur is None or record_beats(rec, cur):
+                index[rec.key] = rec
+        if not index:
+            raise GoldenError(
+                f"no records for target {target!r} under cost-model "
+                f"version {COST_MODEL_VERSION!r} — nothing to promote")
+
+        prev_hdr, prev_records = self.previous(target)
+        # the release header carries its content sha1, not its own filename
+        # (the name is derived); reconstruct it for the manifest lineage
+        prev_name = (self.release_name(target, prev_hdr["sha1"])
+                     if prev_hdr else None)
+        regressions = find_regressions(index, prev_records)
+        waived: List[Regression] = []
+        blocking: List[Regression] = []
+        for reg in regressions:
+            spec = next((w for w in waive if waiver_matches(w, reg)), None)
+            if spec is not None:
+                waived.append(dataclasses.replace(reg, waived_by=spec))
+            else:
+                blocking.append(reg)
+        if blocking:
+            raise GoldenRegressionError(blocking)
+
+        best = [index[k] for k in sorted(index)]
+        payload = [dataclasses.asdict(r) for r in best]
+        digest = hashlib.sha1(_payload(payload).encode()).hexdigest()
+        name = self.release_name(target, digest)
+        path = os.path.join(self.out_dir, name)
+        rebuilt = force or not os.path.exists(path)
+        if rebuilt:
+            obj = {
+                # header-first like snapshots: identity fields come before
+                # the record array so read_snapshot_header stays cheap
+                "schema": GOLDEN_SCHEMA,
+                "target": target,
+                "cost_model_version": COST_MODEL_VERSION,
+                "count": len(payload),
+                "sha1": digest,
+                "built_at": round(time.time(), 3),
+                "source": source,
+                "predecessor": prev_name,
+                "waivers": [dataclasses.asdict(w) for w in waived],
+                "records": payload,
+            }
+            _atomic_write_json(path, obj)
+        cur = self.current(target)
+        repointed = cur is None or cur.get("release") != name
+        if repointed:
+            _atomic_write_json(self.latest_path(target), {
+                "schema": GOLDEN_POINTER_SCHEMA,
+                "release": name,
+                "target": target,
+                "sha1": digest,
+                "count": len(payload),
+                "cost_model_version": COST_MODEL_VERSION,
+            }, sort_keys=True)
+        return GoldenInfo(
+            name=name, path=path, latest=self.latest_path(target),
+            target=target, sha1=digest, count=len(payload), rebuilt=rebuilt,
+            repointed=repointed, predecessor=prev_name,
+            waived=waived, gated_against=len(prev_records))
+
+    def publish(self, transport, info: GoldenInfo,
+                bundle: Optional["BundleInfo"] = None) -> List:
+        """Push a promoted release (payload before pointer, like
+        ``SnapshotManager.publish``) and optionally its kernel bundle over
+        a transport. Returns the manifests."""
+        from repro.tuna.transport import resolve_transport
+
+        t = resolve_transport(transport)
+        manifests = [t.push(info.path, info.name)]
+        manifests.append(t.push(info.latest,
+                                os.path.basename(info.latest)))
+        if bundle is not None:
+            manifests.append(t.push(bundle.path, bundle.name))
+            if bundle.latest:
+                manifests.append(t.push(bundle.latest,
+                                        os.path.basename(bundle.latest)))
+        return manifests
+
+
+def _atomic_write_json(path: str, obj: Dict, sort_keys: bool = False,
+                       ) -> None:
+    d = os.path.dirname(path) or "."
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".golden.tmp")
+    try:
+        with os.fdopen(fd, "w", encoding="utf-8") as f:
+            json.dump(obj, f, default=float, sort_keys=sort_keys)
+            f.write("\n")
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+# -- AOT kernel bundles -----------------------------------------------------
+
+_MATMUL_SIG = re.compile(r"^matmul\[(.+)\]$")
+_FLASH_SIG = re.compile(r"^flash\[(.+)\]$")
+
+
+def _sig_fields(body: str) -> Dict[str, int]:
+    out = {}
+    for part in body.split(","):
+        k, _, v = part.partition("=")
+        out[k.strip()] = int(v)
+    return out
+
+
+@dataclasses.dataclass
+class BundlePlan:
+    """One record the bundle builder knows how to AOT-compile."""
+
+    record: ScheduleRecord
+    kernel: str                     # "matmul" | "flash"
+    in_avals: List[Tuple[Tuple[int, ...], str]]   # per-arg (shape, dtype)
+    params: Dict                    # semantic knobs baked into the compile
+
+
+def plan_bundle_entries(records: Iterable[ScheduleRecord],
+                        ) -> Tuple[List[BundlePlan], List[Tuple[str, str]]]:
+    """Partition golden records into AOT-compilable kernel plans and
+    ``(op, why)`` skips. Only the Pallas kernel families are bundleable;
+    everything else (conv spaces, cpu-knob schedules) still rides in the
+    bundle's schedule index, it just has no executable."""
+    plans: List[BundlePlan] = []
+    skipped: List[Tuple[str, str]] = []
+    for rec in records:
+        m = _MATMUL_SIG.match(rec.op)
+        if m:
+            f = _sig_fields(m.group(1))
+            dtype = _DTYPE_BY_BYTES.get(f.get("dtype_bytes", 0))
+            if dtype is None:
+                skipped.append((rec.op, "unsupported dtype_bytes"))
+                continue
+            if not {"bm", "bn", "bk"} <= set(rec.config):
+                skipped.append((rec.op, "no TPU block schedule in config "
+                                        "(cpu-knob record)"))
+                continue
+            M, N, K = f["M"], f["N"], f["K"]
+            plans.append(BundlePlan(
+                record=rec, kernel="matmul",
+                in_avals=[((M, K), dtype), ((K, N), dtype)],
+                params={}))
+            continue
+        m = _FLASH_SIG.match(rec.op)
+        if m:
+            f = _sig_fields(m.group(1))
+            dtype = _DTYPE_BY_BYTES.get(f.get("dtype_bytes", 0))
+            if dtype is None:
+                skipped.append((rec.op, "unsupported dtype_bytes"))
+                continue
+            if not {"block_q", "block_k"} <= set(rec.config):
+                skipped.append((rec.op, "no block_q/block_k in config"))
+                continue
+            s, d = f["s"], f["d"]
+            shape = (1, 1, s, d)   # canonical single-head, batch-1 layout
+            plans.append(BundlePlan(
+                record=rec, kernel="flash",
+                in_avals=[(shape, dtype)] * 3,
+                params={"causal": True, "scale": d ** -0.5}))
+            continue
+        skipped.append((rec.op, "no Pallas kernel for this op family"))
+    return plans, skipped
+
+
+def _exec_key(kernel: str, in_avals: Sequence[Tuple[Sequence[int], str]],
+              params: Optional[Dict] = None) -> str:
+    """Canonical runtime-lookup key for an AOT executable: kernel family +
+    concrete input (shape, dtype) list + the semantic knobs baked into the
+    compile. Built identically by the bundle builder and the dispatch
+    site, so equality is string equality."""
+    return json.dumps({
+        "kernel": kernel,
+        "in": [[list(shape), str(dtype)] for shape, dtype in in_avals],
+        "params": dict(params or {}),
+    }, sort_keys=True, default=float)
+
+
+def _build_plan_executable(plan: BundlePlan, interpret: bool):
+    """Trace + lower + compile one plan via the AOT path; returns the
+    serialized executable bytes. jax is imported here, not at module
+    scope — promotion never needs it."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import serialize_executable
+
+    args = [jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+            for shape, dtype in plan.in_avals]
+    cfg = plan.record.config
+    if plan.kernel == "matmul":
+        from repro.kernels.matmul import matmul_pallas
+
+        fn = functools.partial(matmul_pallas, bm=cfg["bm"], bn=cfg["bn"],
+                               bk=cfg["bk"], interpret=interpret)
+    elif plan.kernel == "flash":
+        from repro.kernels.flash_attention import flash_attention_pallas
+
+        fn = functools.partial(
+            flash_attention_pallas, causal=plan.params["causal"],
+            scale=plan.params["scale"], block_q=cfg["block_q"],
+            block_k=cfg["block_k"], interpret=interpret)
+    else:  # pragma: no cover - plan_bundle_entries only emits the two
+        raise BundleError(f"unknown kernel family {plan.kernel!r}")
+    compiled = jax.jit(fn).lower(*args).compile()
+    payload, _, _ = serialize_executable.serialize(compiled)
+    return payload
+
+
+@dataclasses.dataclass
+class BundleInfo:
+    name: str
+    path: str
+    latest: Optional[str]
+    target: str
+    sha1: str
+    entries: int
+    schedules: int
+    skipped: List[Tuple[str, str]]
+
+
+def build_kernel_bundle(records: Sequence[ScheduleRecord], out_dir: str,
+                        target: str, golden_name: Optional[str] = None,
+                        interpret: Optional[bool] = None,
+                        prefix: str = "bundle",
+                        write_pointer: bool = True) -> BundleInfo:
+    """AOT-compile every bundleable golden record into a kernel bundle.
+
+    The artifact is one JSON file: header (schema, digest, backend,
+    jax/jaxlib versions — executables are not portable across those), the
+    full golden **schedule index** (so the bundle alone is a lookup tier),
+    and per-kernel **entries** carrying the serialized executable
+    (base64). ``interpret=None`` picks Pallas interpret mode off-TPU —
+    the same dispatch rule ``kernels.ops`` uses at runtime."""
+    import jax
+    import jaxlib
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    plans, skipped = plan_bundle_entries(records)
+    entries = []
+    for plan in plans:
+        payload = _build_plan_executable(plan, interpret)
+        entries.append({
+            "op": plan.record.op,
+            "kernel": plan.kernel,
+            "target": plan.record.target,
+            "version": plan.record.version,
+            "config": dict(plan.record.config),
+            "score": float(plan.record.score),
+            "in_avals": [[list(shape), dtype]
+                         for shape, dtype in plan.in_avals],
+            "params": dict(plan.params),
+            "exec_sha1": hashlib.sha1(payload).hexdigest(),
+            "executable_b64": base64.b64encode(payload).decode("ascii"),
+        })
+    schedules = [dataclasses.asdict(r) for r in records]
+    digest = hashlib.sha1(
+        _payload(entries + schedules).encode()).hexdigest()
+    name = f"{prefix}.{target}.{COST_MODEL_VERSION}-{digest[:12]}.json"
+    path = os.path.join(out_dir, name)
+    obj = {
+        "schema": BUNDLE_SCHEMA,
+        "target": target,
+        "cost_model_version": COST_MODEL_VERSION,
+        "golden": golden_name,
+        "backend": jax.default_backend(),
+        "interpret": interpret,
+        "jax_version": jax.__version__,
+        "jaxlib_version": jaxlib.__version__,
+        "count": len(entries),
+        "schedule_count": len(schedules),
+        "sha1": digest,
+        "built_at": round(time.time(), 3),
+        "skipped": [list(s) for s in skipped],
+        "schedules": schedules,
+        "entries": entries,
+    }
+    _atomic_write_json(path, obj)
+    latest = None
+    if write_pointer:
+        latest = os.path.join(out_dir, f"{prefix}.{target}.latest.json")
+        _atomic_write_json(latest, {
+            "schema": BUNDLE_POINTER_SCHEMA,
+            "bundle": name,
+            "target": target,
+            "sha1": digest,
+            "count": len(entries),
+            "cost_model_version": COST_MODEL_VERSION,
+        }, sort_keys=True)
+    return BundleInfo(name=name, path=path, latest=latest, target=target,
+                      sha1=digest, entries=len(entries),
+                      schedules=len(schedules), skipped=skipped)
+
+
+class KernelBundle:
+    """A loaded kernel bundle: AOT executables + the golden schedule index.
+
+    Two read surfaces, both lock-free after load:
+
+    * :meth:`best` — ``(op, target, version)`` → golden ``ScheduleRecord``;
+      what ``core.tuner`` consults as the first lookup tier. Immutable,
+      like ``ScheduleCache`` (the tuner's write-back gate respects it).
+    * :meth:`executable` — ``(kernel, concrete args, params)`` → a callable
+      wrapping the deserialized compiled executable, or ``None``.
+      Deserialization is lazy and memoised; a hit performs **zero** Pallas
+      traces and zero compiles.
+    """
+
+    immutable = True
+
+    def __init__(self, obj: Dict, source: str = "<memory>"):
+        self.source = source
+        self.target = obj.get("target")
+        self.golden = obj.get("golden")
+        self.backend = obj.get("backend")
+        self.interpret = bool(obj.get("interpret", False))
+        self.cost_model_version = obj.get("cost_model_version")
+        self.sha1 = obj.get("sha1")
+        self.built_at = obj.get("built_at")
+        self._entries: Dict[str, Dict] = {}
+        self._loaded: Dict[str, object] = {}   # exec key -> callable
+        self._best: Dict[Key, ScheduleRecord] = {}
+        for rec_obj in obj.get("schedules", []):
+            rec = ScheduleRecord.from_dict(rec_obj)
+            cur = self._best.get(rec.key)
+            if cur is None or record_beats(rec, cur):
+                self._best[rec.key] = rec
+        for e in obj.get("entries", []):
+            self._entries[_exec_key(e["kernel"], [
+                (tuple(shape), dtype) for shape, dtype in e["in_avals"]
+            ], e.get("params"))] = e
+        self.exec_hits = 0
+        self.exec_misses = 0
+        self.hits = 0      # schedule-tier counters, mirroring ScheduleCache
+        self.misses = 0
+
+    # -- load / verify ----------------------------------------------------
+
+    @classmethod
+    def load(cls, path: str) -> "KernelBundle":
+        """Load + verify a bundle file (follows a ``latest`` pointer).
+
+        Refuses: wrong schema, digest mismatch (torn transport copy), a
+        different ``COST_MODEL_VERSION`` (the schedule tier would miss on
+        every key — same ``StaleSnapshotError`` discipline as snapshots),
+        or a different jax *backend* (serialized executables are compiled
+        artifacts; a cpu-built bundle must never pretend to serve tpu)."""
+        import jax
+
+        path = os.fspath(path)
+        with open(path, "r", encoding="utf-8") as f:
+            obj = json.load(f)
+        if isinstance(obj, dict) and \
+                obj.get("schema") == BUNDLE_POINTER_SCHEMA:
+            target = os.path.join(os.path.dirname(os.path.abspath(path)),
+                                  obj["bundle"])
+            return cls.load(target)
+        if not isinstance(obj, dict) or obj.get("schema") != BUNDLE_SCHEMA:
+            schema = obj.get("schema") if isinstance(obj, dict) else None
+            raise BundleError(f"{path}: not a kernel bundle "
+                              f"(schema={schema!r}, want {BUNDLE_SCHEMA!r})")
+        digest = hashlib.sha1(_payload(
+            obj.get("entries", []) + obj.get("schedules", [])
+        ).encode()).hexdigest()
+        if digest != obj.get("sha1"):
+            raise BundleError(
+                f"{path}: bundle digest mismatch (corrupt or torn copy); "
+                f"rebuild with `python -m repro.tuna golden --bundle`")
+        if obj.get("cost_model_version") != COST_MODEL_VERSION:
+            raise StaleSnapshotError(
+                f"{path}: kernel bundle was built for cost-model version "
+                f"{obj.get('cost_model_version')!r} but this process runs "
+                f"{COST_MODEL_VERSION!r}; re-promote and rebuild the "
+                f"bundle (`python -m repro.tuna golden --bundle`)")
+        backend = jax.default_backend()
+        if obj.get("backend") != backend:
+            raise BundleError(
+                f"{path}: bundle executables were compiled for backend "
+                f"{obj.get('backend')!r} but this process runs "
+                f"{backend!r}; AOT executables are not portable across "
+                f"backends — rebuild the bundle on this platform")
+        return cls(obj, source=path)
+
+    # -- schedule tier (core.tuner consults this first) -------------------
+
+    def best(self, op: str, target: str,
+             version: str = COST_MODEL_VERSION) -> Optional[ScheduleRecord]:
+        rec = self._best.get((op, target, version))
+        if rec is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return rec
+
+    def records(self) -> List[ScheduleRecord]:
+        return [self._best[k] for k in sorted(self._best)]
+
+    def add(self, *args, **kwargs):
+        raise TypeError(
+            "KernelBundle is an immutable release artifact; write to the "
+            "ScheduleDatabase and re-promote (`python -m repro.tuna "
+            "golden --bundle`)")
+
+    # -- executable tier (kernels.ops dispatches through this) ------------
+
+    def executable(self, kernel: str, args: Sequence,
+                   params: Optional[Dict] = None):
+        """The AOT executable matching ``kernel`` called on concrete
+        ``args`` with semantic ``params``, or ``None`` (caller falls back
+        to the ordinary trace-and-compile path)."""
+        key = _exec_key(kernel, [(tuple(a.shape), a.dtype.name)
+                                 for a in args], params)
+        fn = self._loaded.get(key)
+        if fn is None:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.exec_misses += 1
+                return None
+            fn = self._deserialize(key, entry)
+        self.exec_hits += 1
+        return fn
+
+    def _deserialize(self, key: str, entry: Dict):
+        import jax
+        from jax.experimental import serialize_executable
+
+        payload = base64.b64decode(entry["executable_b64"])
+        if hashlib.sha1(payload).hexdigest() != entry.get("exec_sha1"):
+            raise BundleError(
+                f"{self.source}: executable payload for {entry['op']!r} "
+                f"does not match its digest — corrupt bundle")
+        # the kernels take positional array args and return one array, so
+        # the calling convention's pytrees are reconstructible without
+        # pickling PyTreeDefs into the artifact
+        in_tree = jax.tree_util.tree_structure(
+            (tuple(0 for _ in entry["in_avals"]), {}))
+        out_tree = jax.tree_util.tree_structure(0)
+        fn = serialize_executable.deserialize_and_load(
+            payload, in_tree, out_tree)
+        self._loaded[key] = fn
+        return fn
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Key) -> bool:
+        return key in self._best
+
+    def describe(self) -> str:
+        return (f"{len(self._entries)} AOT kernels / "
+                f"{len(self._best)} schedules "
+                f"[{self.backend}, {self.cost_model_version}]"
+                + (f" from golden {self.golden}" if self.golden else ""))

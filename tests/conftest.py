@@ -20,6 +20,8 @@ def _no_default_schedule_db():
 
     tuner.set_default_db(None)
     tuner.set_default_cache(None)
+    tuner.set_default_bundle(None)
     yield
     tuner.set_default_db(None)
     tuner.set_default_cache(None)
+    tuner.set_default_bundle(None)
