@@ -1,0 +1,53 @@
+"""NaN-safe JSON emission for BENCH_*.json artifacts.
+
+``json.dump`` happily serializes ``float("nan")`` as the bare token
+``NaN`` — not valid JSON, so every downstream consumer (CI ``--check``
+re-parsers, dashboards) chokes on the whole file because one warm-hit
+record lacked a ``default_score``. ``sanitize`` replaces every non-finite
+float with ``None`` and flags it (``<key>_missing: true``) so the absence
+is explicit instead of corrupting; ``write_bench`` additionally passes
+``allow_nan=False`` so any non-finite value that slips past sanitisation
+is a loud error rather than an invalid artifact.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Any, Dict
+
+
+def _bad(v: Any) -> bool:
+    return isinstance(v, float) and not math.isfinite(v)
+
+
+def sanitize(obj: Any) -> Any:
+    """Deep-copy ``obj`` with non-finite floats replaced by ``None``. Dict
+    entries additionally gain a ``<key>_missing: true`` sibling so report
+    readers can tell "absent" from "never computed"."""
+    if isinstance(obj, dict):
+        out: Dict = {}
+        for k, v in obj.items():
+            if _bad(v):
+                out[k] = None
+                out.setdefault(f"{k}_missing", True)
+            else:
+                out[k] = sanitize(v)
+        return out
+    if isinstance(obj, (list, tuple)):
+        return [None if _bad(v) else sanitize(v) for v in obj]
+    return obj
+
+
+def write_bench(obj: Any, path: str) -> Any:
+    """Sanitize + write a benchmark result as strictly valid JSON; returns
+    the sanitized object (what the file actually says)."""
+    clean = sanitize(obj)
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(clean, f, indent=2, sort_keys=True, default=float,
+                  allow_nan=False)
+        f.write("\n")
+    return clean

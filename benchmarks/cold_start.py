@@ -33,7 +33,6 @@ tune-time and serve-time halves of the story live in one artifact:
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import tempfile
 import time
@@ -251,9 +250,9 @@ def main() -> int:
     print(f"[bench_compile] tune-time (Table II, {ct['n_configs']} cfgs): "
           f"static {ct['static_s']:.3f}s vs dynamic {ct['dynamic_s']:.3f}s "
           f"({ct['speedup']:.0f}x)")
-    with open(args.out, "w", encoding="utf-8") as f:
-        json.dump(result, f, indent=2, sort_keys=True, default=float)
-        f.write("\n")
+    from benchmarks.bench_json import write_bench
+
+    write_bench(result, args.out)
     print(f"[bench_compile] wrote {args.out}")
     if args.check:
         bad = check(result)

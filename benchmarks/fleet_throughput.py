@@ -176,8 +176,9 @@ def main() -> None:
                             args.shards, args.limit, args.workers, workdir)
     finally:
         shutil.rmtree(workdir, ignore_errors=True)
-    with open(args.out, "w") as f:
-        json.dump(res, f, indent=2, sort_keys=True)
+    from benchmarks.bench_json import write_bench
+
+    write_bench(res, args.out)
 
     man, ctl, healed = (res["manual"], res["controller"],
                         res["controller_healed"])

@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import argparse
 import copy
-import json
 import sys
 from typing import Dict, List
 
@@ -112,8 +111,9 @@ def main() -> None:
     res = run_benchmark(arch=args.arch, reduced=not args.full,
                         n_requests=args.requests, slots=args.slots,
                         seed=args.seed)
-    with open(args.out, "w") as f:
-        json.dump(res, f, indent=2, sort_keys=True)
+    from benchmarks.bench_json import write_bench
+
+    write_bench(res, args.out)
     for s in ("wave", "continuous"):
         r = res[s]
         print(f"[bench_serve] {s:11s} {r['tokens']} tok, "

@@ -1,18 +1,31 @@
 """Paper Fig. 3/4: top-k performance ratio, Tuna static ranking vs measured
 ground truth, on the host CPU.
 
-ratio_k = Σ latency(measured-oracle top-k) / Σ latency(Tuna-static top-k)
+ratio_k = Σ latency(measured-oracle top-k) / Σ latency(Tuna top-k)
 
 (paper definition with AutoTVM-full playing the oracle role; → 1.0 means the
 static model picks schedules as good as full on-device tuning). Operators:
 matmul, batch_matmul, conv2d (im2col-reduced — its GEMM schedule is what
 Tuna ranks). The candidate set is a seeded random sample of the space.
+
+``--learned <artifact>`` additionally scores the *hybrid* ranking (static
+``cm1`` prunes, the ``repro.core.learned`` ranker re-orders the top
+candidates — zero extra measurements, the same ``times`` table serves both
+rankings) and reports ``hybrid_ratio@k`` next to ``ratio@k``; ``--check``
+gates hybrid ≥ static on the mean across operators. ``--collect`` appends
+every per-config measurement to the store as a ``cm1-meas``-lineage record
+— the ground-truth training set ``python -m repro.tuna train`` fits from.
+
+Run: ``python -m benchmarks.topk_ratio [--quick] [--db PATH] [--collect]
+[--learned ARTIFACT] [--check] [--out BENCH.json]``
 """
 from __future__ import annotations
 
+import argparse
 import random
+import sys
 import time
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -24,16 +37,31 @@ from repro.hw import get_target
 from benchmarks.measure import measure_config
 
 
-def sample_space(space, n: int, seed: int = 0) -> List[Dict]:
-    all_cfgs = list(space.enumerate(4096))
+def sample_space(space, n: int, seed: int = 0,
+                 limit: Optional[int] = None) -> List[Dict]:
+    """Seeded random sample of ``n`` configs. The candidate pool is the
+    *whole* space by default; an explicit ``limit`` caps enumeration (and
+    is reported loudly when it actually truncates — a silently-capped pool
+    would make top-k coverage numbers look exhaustive when they aren't)."""
+    size = space.size()
+    cap = size if limit is None else min(limit, size)
+    all_cfgs = list(space.enumerate(cap))
+    if cap < size:
+        print(f"[topk] {space.signature()}: enumeration truncated to "
+              f"{cap} of {size} configs (limit={limit})", file=sys.stderr)
     rng = random.Random(seed)
     return all_cfgs if len(all_cfgs) <= n else rng.sample(all_cfgs, n)
+
+
+def _tkey(cfg: Dict) -> Tuple:
+    return tuple(sorted(cfg.items()))
 
 
 def topk_ratio_matmul(
     M: int, N: int, K: int, n_configs: int = 24, ks=(10,), iters: int = 3,
     batch: int = 1, seed: int = 0, calibrated: bool = True,
-    db=None,
+    db=None, limit: Optional[int] = None,
+    learned=None, rerank_top: int = 12, collect: bool = False,
 ) -> Dict:
     """Returns {'ratio@k':..., 'static_s':..., 'measure_s':...}. ``batch``
     reuses the same schedule space with a leading vmap (batch_matmul).
@@ -45,12 +73,25 @@ def topk_ratio_matmul(
     static pick is written back (under a fingerprinted ``cm1-cal-<hash>``
     version when calibrated, since fitted coefficients are host-specific),
     and a pre-existing record is surfaced as ``warm_config`` in the
-    result."""
+    result. ``collect`` additionally appends *every* measured (config,
+    seconds) pair under the ``cm1-meas`` lineage — training data for the
+    learned ranker, kept in the log even though the index only retains the
+    per-key best.
+
+    ``learned`` (a ``LearnedRanker`` or artifact path) reports the hybrid
+    ranking side by side as ``hybrid_ratio@k``/``hybrid_top1_ratio``; the
+    re-rank spends zero hardware measurements (the shared ``times`` table
+    covers both rankings, so equal top-k sets give exactly equal ratios).
+    """
     target = get_target("cpu_avx2")
     if db is not None:  # None stays off (unlike tune, no default-DB pull)
         from repro.core.tuner import resolve_db
 
         db = resolve_db(db)
+    if learned is not None:
+        from repro.core.tuner import resolve_learned
+
+        learned = resolve_learned(learned)
     coeffs = None
     if calibrated:
         from repro.core.calibrate import cached_cpu_coeffs, coeffs_for_scoring
@@ -59,7 +100,7 @@ def topk_ratio_matmul(
         if fitted:
             coeffs = coeffs_for_scoring(fitted)
     space = MatmulSpace(M, N, K, 4, target_kind="cpu")
-    cfgs = sample_space(space, n_configs, seed)
+    cfgs = sample_space(space, n_configs, seed, limit=limit)
 
     t0 = time.perf_counter()
     scores = [(cfg, _score_config(space, target, cfg, coeffs))
@@ -72,29 +113,41 @@ def topk_ratio_matmul(
     t0 = time.perf_counter()
     times = {}
     for cfg, _ in scores:
-        key = tuple(sorted(cfg.items()))
-        times[key] = measure_config(M, N, K, cfg, a, b, iters=iters) * batch
+        times[_tkey(cfg)] = measure_config(M, N, K, cfg, a, b,
+                                           iters=iters) * batch
     measure_s = time.perf_counter() - t0
 
     by_static = sorted(scores, key=lambda cs: cs[1])
-    by_measured = sorted(scores, key=lambda cs: times[tuple(sorted(cs[0].items()))])
+    by_measured = sorted(scores, key=lambda cs: times[_tkey(cs[0])])
 
     out = {"static_s": static_s, "measure_s": measure_s,
-           "n_configs": len(cfgs)}
+           "n_configs": len(cfgs), "space_size": space.size(),
+           "sample_truncated": (limit is not None and limit < space.size())}
+    by_hybrid = None
+    if learned is not None:
+        t0 = time.perf_counter()
+        by_hybrid = learned.rerank(space, target, by_static, top=rerank_top)
+        out["hybrid_s"] = time.perf_counter() - t0
+        out["learned_version"] = learned.version
     for k in ks:
         k = min(k, len(cfgs))
-        t_static = sum(times[tuple(sorted(c.items()))] for c, _ in by_static[:k])
-        t_oracle = sum(times[tuple(sorted(c.items()))] for c, _ in by_measured[:k])
+        t_static = sum(times[_tkey(c)] for c, _ in by_static[:k])
+        t_oracle = sum(times[_tkey(c)] for c, _ in by_measured[:k])
         out[f"ratio@{k}"] = t_oracle / t_static
+        if by_hybrid is not None:
+            t_hybrid = sum(times[_tkey(c)] for c, _ in by_hybrid[:k])
+            out[f"hybrid_ratio@{k}"] = t_oracle / t_hybrid
     # top-1 regret: chosen best vs true best
-    best_static = times[tuple(sorted(by_static[0][0].items()))]
-    best_oracle = times[tuple(sorted(by_measured[0][0].items()))]
+    best_static = times[_tkey(by_static[0][0])]
+    best_oracle = times[_tkey(by_measured[0][0])]
     out["top1_ratio"] = best_oracle / best_static
     out["best_static_ms"] = best_static * 1e3
     out["best_oracle_ms"] = best_oracle * 1e3
+    if by_hybrid is not None:
+        out["hybrid_top1_ratio"] = best_oracle / times[_tkey(by_hybrid[0][0])]
 
     if db is not None:
-        from repro.tuna.db import ScheduleRecord
+        from repro.tuna.db import ScheduleRecord, stamp_tuned_at
 
         version = record_version(coeffs)
         if len(cfgs) < space.size():
@@ -112,28 +165,131 @@ def topk_ratio_matmul(
                   "oracle_ms": best_oracle * 1e3},
             version=version,
         ))
+        if collect:
+            from repro.core.learned import measured_version
+
+            mv = measured_version()
+            for cfg, _ in scores:
+                # all samples share one key: the index keeps the fastest,
+                # the append-only log keeps every (config, seconds) pair —
+                # which is the part the trainer reads
+                db.add(ScheduleRecord(
+                    op=space.signature(), target=target.name,
+                    config=dict(cfg), score=times[_tkey(cfg)],
+                    evaluations=iters,
+                    meta=stamp_tuned_at({"strategy": "measured_sample",
+                                         "iters": iters, "batch": batch}),
+                    version=mv,
+                ))
+            out["collected"] = len(scores)
     return out
 
 
 # operator suite (paper: conv2d, conv2d_winograd, depthwise, batch_matmul)
-def operator_suite(quick: bool = True) -> List[Tuple[str, Dict]]:
+def operator_suite(quick: bool = True, db=None, learned=None,
+                   collect: bool = False, seed: int = 0,
+                   ) -> List[Tuple[str, Dict]]:
     n = 16 if quick else 48
     it = 3 if quick else 7
+    kw = dict(db=db, learned=learned, collect=collect, seed=seed)
     results = []
     results.append(
-        ("matmul_256", topk_ratio_matmul(256, 256, 256, n, ks=(5, 10), iters=it))
+        ("matmul_256", topk_ratio_matmul(256, 256, 256, n, ks=(5, 10),
+                                         iters=it, **kw))
     )
     results.append(
-        ("matmul_512", topk_ratio_matmul(512, 512, 512, n, ks=(5, 10), iters=it))
+        ("matmul_512", topk_ratio_matmul(512, 512, 512, n, ks=(5, 10),
+                                         iters=it, **kw))
     )
     # conv2d 14x14x256 -> 256, 3x3 via im2col: GEMM (H·W=196→pad 256, Cin·9, Cout)
     results.append(
         ("conv2d_im2col", topk_ratio_matmul(256, 256, 2304 // 3 * 3, n,
-                                            ks=(5, 10), iters=it))
+                                            ks=(5, 10), iters=it, **kw))
     )
     # batch_matmul: attention-shaped (S x dh x S), batch folded into timing
     results.append(
         ("batch_matmul", topk_ratio_matmul(128, 128, 64, n, ks=(5, 10),
-                                           iters=it, batch=8))
+                                           iters=it, batch=8, **kw))
     )
     return results
+
+
+def _mean_ratios(results: List[Tuple[str, Dict]],
+                 prefix: str) -> Optional[float]:
+    vals = [v for _, res in results for key, v in res.items()
+            if key.startswith(prefix + "@")]
+    return sum(vals) / len(vals) if vals else None
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        description="top-k performance ratio: static cm1 vs measured "
+                    "oracle, optionally vs the hybrid learned ranker")
+    p.add_argument("--quick", action="store_true", default=True,
+                   help="CI-sized candidate sets (default)")
+    p.add_argument("--full", dest="quick", action="store_false",
+                   help="paper-sized candidate sets")
+    p.add_argument("--db", default=None,
+                   help="schedule store to write winners (and --collect "
+                        "samples) into")
+    p.add_argument("--collect", action="store_true",
+                   help="append every per-config measurement to --db under "
+                        "the cm1-meas lineage (training data)")
+    p.add_argument("--learned", default=None, metavar="ARTIFACT",
+                   help="learned-ranker artifact (or latest pointer): "
+                        "report the hybrid ranking side by side")
+    p.add_argument("--check", action="store_true",
+                   help="exit 1 unless mean hybrid ratio@k >= mean static "
+                        "ratio@k (requires --learned)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--out", default=None, help="write BENCH json here")
+    args = p.parse_args(argv)
+    if args.collect and not args.db:
+        p.error("--collect requires --db")
+    if args.check and not args.learned:
+        p.error("--check requires --learned")
+
+    learned = None
+    if args.learned:
+        from repro.core.tuner import resolve_learned
+
+        learned = resolve_learned(args.learned)  # verified load, once
+    results = operator_suite(quick=args.quick, db=args.db,
+                             learned=learned, collect=args.collect,
+                             seed=args.seed)
+    static_mean = _mean_ratios(results, "ratio")
+    hybrid_mean = _mean_ratios(results, "hybrid_ratio")
+    for name, res in results:
+        pairs = ", ".join(f"{k}={v:.4f}" for k, v in sorted(res.items())
+                          if k.startswith(("ratio@", "hybrid_ratio@",
+                                           "top1_ratio", "hybrid_top1")))
+        print(f"{name:16s} {pairs}")
+    summary = {"operators": dict(results),
+               "static_mean_ratio": static_mean,
+               "hybrid_mean_ratio": hybrid_mean,
+               "seed": args.seed, "quick": args.quick}
+    if hybrid_mean is not None:
+        print(f"mean ratio@k     static={static_mean:.4f} "
+              f"hybrid={hybrid_mean:.4f}")
+    if args.check:
+        # the shared times table makes equal top-k sets exactly equal, so
+        # the >= gate is safe on ties; the epsilon only absorbs float
+        # summation order
+        ok = hybrid_mean is not None and hybrid_mean >= static_mean - 1e-9
+        summary["check"] = {"ok": ok, "gate": "hybrid_mean >= static_mean"}
+    if args.out:
+        from benchmarks.bench_json import write_bench
+
+        write_bench(summary, args.out)
+        print(f"wrote {args.out}")
+    if args.check:
+        if not summary["check"]["ok"]:
+            print(f"CHECK FAILED: hybrid mean ratio {hybrid_mean} < "
+                  f"static mean ratio {static_mean}", file=sys.stderr)
+            return 1
+        print("CHECK OK: hybrid >= static")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

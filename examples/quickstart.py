@@ -24,8 +24,10 @@ def main() -> None:
 
     # Evolution-strategies search with the static cost model as fitness
     res = tune(space, target, iterations=12, population=16, seed=0)
+    dflt = ("unknown (warm hit without a stored default_score)"
+            if res.default_score_missing else f"{res.default_score:.3e}")
     print(f"ES picked {res.config} score={res.score:.3e} "
-          f"(default schedule: {res.default_score:.3e}; "
+          f"(default schedule: {dflt}; "
           f"{res.evaluations} static evals in {res.wall_seconds:.2f}s)")
 
     # exhaustive static ranking agrees?

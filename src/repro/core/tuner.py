@@ -40,6 +40,7 @@ _UNSET = object()
 _DEFAULT_DB = _UNSET  # _UNSET = fall back to $REPRO_TUNA_DB; None = off
 _DEFAULT_CACHE = _UNSET  # _UNSET = fall back to $REPRO_TUNA_CACHE
 _DEFAULT_BUNDLE = _UNSET  # _UNSET = fall back to $REPRO_TUNA_BUNDLE
+_DEFAULT_LEARNED = _UNSET  # _UNSET = fall back to $REPRO_TUNA_LEARNED
 _DEFAULT_CACHE_PATH: Optional[str] = None  # where the default snapshot was
 #                                   installed from — what hot reload rechecks
 _PATH_DBS: Dict[str, object] = {}  # abspath -> ScheduleDatabase (one load
@@ -264,6 +265,72 @@ def get_default_bundle():
     return _DEFAULT_BUNDLE
 
 
+def set_default_learned(model) -> None:
+    """Install the process-wide learned ranker
+    (``repro.core.learned.LearnedRanker``, or a path/`latest` pointer to a
+    saved artifact) used by ``rank_space``/``best_schedule`` to re-rank the
+    statically-pruned top candidates. ``None`` switches it OFF, including
+    the ``$REPRO_TUNA_LEARNED`` fallback. Clears the block-spec memo
+    caches so already-traced shapes re-resolve under the hybrid version.
+    An explicit install of a missing, corrupt, tampered, or stale (wrong
+    ``COST_MODEL_VERSION``) artifact raises — never silently served."""
+    global _DEFAULT_LEARNED
+    if isinstance(model, (str, os.PathLike)):
+        from repro.core.learned import load_ranker
+
+        model = load_ranker(model)
+    _DEFAULT_LEARNED = model
+    _clear_memos()
+
+
+def get_default_learned():
+    """The installed learned ranker, else one loaded from
+    ``$REPRO_TUNA_LEARNED``. Mirrors ``get_default_cache``'s env handling:
+    a path that does not exist (model not trained yet) resolves to OFF; a
+    stale artifact (different ``COST_MODEL_VERSION``) resolves to OFF with
+    a ``StaleSnapshotWarning`` — and both degrade paths clear the
+    block-spec memos, so shapes memoised under an earlier model never
+    outlive its rejection."""
+    global _DEFAULT_LEARNED
+    if _DEFAULT_LEARNED is _UNSET:
+        path = os.environ.get("REPRO_TUNA_LEARNED")
+        if not path:
+            _DEFAULT_LEARNED = None
+        else:
+            from repro.core.learned import load_ranker
+            from repro.tuna.cache import (StaleSnapshotError,
+                                          StaleSnapshotWarning)
+
+            try:
+                _DEFAULT_LEARNED = load_ranker(path)
+            except FileNotFoundError:
+                _DEFAULT_LEARNED = None  # not trained yet
+                _clear_memos()
+            except StaleSnapshotError as e:
+                import warnings
+
+                warnings.warn(f"$REPRO_TUNA_LEARNED disabled: {e}",
+                              StaleSnapshotWarning, stacklevel=2)
+                _DEFAULT_LEARNED = None
+                _clear_memos()
+    return _DEFAULT_LEARNED
+
+
+def resolve_learned(learned):
+    """Coerce a ``learned`` argument: ``False`` → off, ``None`` → the
+    process default, a path → a loaded (and verified) artifact, an
+    instance → itself."""
+    if learned is False:
+        return None
+    if learned is None:
+        return get_default_learned()
+    if isinstance(learned, (str, os.PathLike)):
+        from repro.core.learned import load_ranker
+
+        return load_ranker(learned)
+    return learned
+
+
 def _lookup(op: str, target_name: str, version: str, db):
     """Read path shared by tune/best_schedule/block-spec pickers: golden
     kernel bundle first (the blessed release), then the snapshot cache
@@ -317,6 +384,11 @@ class TuneResult:
     default_score: float  # score of the space's centre config (no tuning)
     from_db: bool = False  # True when served from the schedule database
     from_cache: bool = False  # True when the hit came from a ScheduleCache
+    default_score_missing: bool = False  # True on warm hits whose stored
+    #   record carries no default_score (e.g. written by rank_space with
+    #   the centre config outside the enumeration limit): default_score is
+    #   NaN then, and speedup math / JSON emitters must treat it as absent
+    #   rather than serialize bare NaN (invalid JSON)
 
 
 def _score_config(space: Space, target: HardwareTarget, cfg: Dict,
@@ -343,7 +415,10 @@ def tune(
         if rec is not None:
             # NaN when the stored record carries no default_score (e.g. it
             # was written by rank_space) — a warm hit spends zero
-            # evaluations, so we won't recompute it here
+            # evaluations, so we won't recompute it here; the explicit
+            # default_score_missing flag is what downstream speedup math
+            # and JSON emitters key off (bare NaN is invalid JSON)
+            has_default = "default_score" in rec.meta
             return TuneResult(
                 config=dict(rec.config),
                 score=rec.score,
@@ -354,6 +429,7 @@ def tune(
                     rec.meta.get("default_score", float("nan"))),
                 from_db=True,
                 from_cache=source in ("cache", "bundle"),
+                default_score_missing=not has_default,
             )
 
     store = resolve_db(db)  # resolved on the miss path only: a snapshot
@@ -404,6 +480,8 @@ def rank_space(
     space: Space, target: HardwareTarget, limit: int = 4096,
     coeffs: Optional[Dict[str, float]] = None,
     db=False,
+    learned=False,
+    rerank_top: int = 32,
 ) -> List[Tuple[Dict, float]]:
     """Static exhaustive ranking (ascending score = predicted fastest first).
 
@@ -413,18 +491,32 @@ def rank_space(
     read path). Calibrated-coefficient rankings are stored under a
     fingerprinted version (``cm1-cal-<hash>``, see ``record_version``) so
     they never collide with datasheet scores or other hosts' fits.
+
+    ``learned`` (``resolve_learned`` semantics; default OFF) makes the
+    ranking *hybrid*: static ``cm1`` scores and prunes the space, the
+    learned ranker re-orders the statically-best ``rerank_top`` candidates
+    — still zero hardware measurements. Hybrid write-backs go under the
+    model's fingerprinted version (``<base>+lr<fp>``, strategy ``hybrid``)
+    so they never collide with pure static records.
     """
     scored = [
         (cfg, _score_config(space, target, cfg, coeffs))
         for cfg in space.enumerate(limit)
     ]
     scored.sort(key=lambda cs: cs[1])
+    model = resolve_learned(learned)
+    if model is not None:
+        scored = model.rerank(space, target, scored, top=rerank_top)
     store = resolve_db(db)
     if _writable(store) and scored:
         from repro.tuna.db import ScheduleRecord, stamp_tuned_at
 
         version = record_version(coeffs)
         meta = {"strategy": "exhaustive", "limit": limit}
+        if model is not None:
+            version = model.hybrid_version(version)
+            meta["strategy"] = "hybrid"
+            meta["rerank_top"] = rerank_top
         dflt = space.default_config()
         default_score = next((s for c, s in scored if c == dflt), None)
         if default_score is not None:  # centre config inside the limit
@@ -444,17 +536,41 @@ def rank_space(
 
 def best_schedule(
     space: Space, target: HardwareTarget, limit: int = 1024, db=None,
+    coeffs: Optional[Dict[str, float]] = None,
+    version: Optional[str] = None,
+    learned=None,
+    rerank_top: int = 32,
 ) -> Tuple[Dict, float]:
-    """Best (config, score) for a space: snapshot-cache or DB hit → zero
-    evaluations; miss → exhaustive rank + write back (to a writable store
-    only). The kernel block-spec pickers sit on this."""
+    """Best (config, score) for a space: bundle/snapshot-cache/DB hit →
+    zero evaluations; miss → exhaustive rank + write back (to a writable
+    store only). The kernel block-spec pickers sit on this.
+
+    ``version`` pins the record version consulted (and nothing else is
+    tried) — the passthrough that lets calibrated ``cm1-cal-<fp>`` writes
+    be calibrated warm hits instead of silently re-ranking under plain
+    ``cm1``. Without it the version is derived: ``record_version(coeffs)``,
+    and when a learned ranker resolves (``learned``; default = the process
+    default, see ``set_default_learned``) the hybrid lineage
+    (``<base>+lr<fp>``) is consulted first with the static lineage as
+    fallback — existing cm1 bundles/caches keep their warm hits."""
+    model = resolve_learned(learned) if version is None else None
     if db is not False:
-        rec = lookup_best(space.signature(), target.name, db=db)
-        if rec is not None:
-            return dict(rec.config), rec.score
+        if version is not None:
+            versions = [version]
+        else:
+            base = record_version(coeffs)
+            versions = ([model.hybrid_version(base), base]
+                        if model is not None else [base])
+        for v in versions:
+            rec = lookup_best(space.signature(), target.name, version=v,
+                              db=db)
+            if rec is not None:
+                return dict(rec.config), rec.score
     store = resolve_db(db)  # miss path only, like tune()
-    ranked = rank_space(space, target, limit=limit,
-                        db=store if _writable(store) else False)
+    ranked = rank_space(space, target, limit=limit, coeffs=coeffs,
+                        db=store if _writable(store) else False,
+                        learned=model if model is not None else False,
+                        rerank_top=rerank_top)
     return ranked[0]
 
 

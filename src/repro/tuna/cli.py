@@ -29,6 +29,17 @@ Subcommands:
            scheduled Pallas kernel into a serialized-executable bundle
            (serve cold-start skips compilation); --publish ships both
            over a transport — see repro.tuna.golden
+  train    fit the learned ranker (repro.core.learned) offline from the
+           store's full log — datasheet cm1, calibrated, and measured
+           (cm1-meas) lineages standardised separately; keeps versioned,
+           content-addressed artifacts (learned.<version>-<digest>.json)
+           plus a `latest` pointer, retrained only when the store's
+           training content or cost-model version changed; --transport
+           pulls the fleet's shard stores first, --publish ships the
+           artifact over a transport
+  eval     judge a trained artifact against the store: per-lineage rank
+           correlation (Spearman) between learned predictions and stored
+           scores; --check gates the mean
   compact  rewrite the log keeping only the best record per key;
            --transport pulls the fleet's shard stores first (then pushes
            the compacted store back); bare per-shard siblings on disk are
@@ -265,6 +276,7 @@ def cmd_controller(args: argparse.Namespace) -> int:
         strategy=args.strategy, limit=limit, seed=args.seed,
         transport=args.transport or None,
         snapshot_dir=args.snapshot_dir, publish=args.publish or None,
+        learned_dir=args.learned_dir,
         lease_s=args.lease_s, poll_s=args.poll_s,
         max_attempts=args.max_attempts, max_workers=args.max_workers,
         worker_procs=args.workers, worker_retries=args.retries,
@@ -375,6 +387,82 @@ def cmd_golden(args: argparse.Namespace) -> int:
                 print(f"[tuna] published {man.name} ({man.size}B, "
                       f"sha1 {man.sha1[:12]}) -> {t.describe()}")
     return rc
+
+
+def cmd_train(args: argparse.Namespace) -> int:
+    rc = _pull_fleet_or_fail(args, "train")
+    if rc:
+        return rc
+    from repro.tuna.learned import LearnedManager
+
+    mgr = LearnedManager(args.db, args.dir, augment=args.augment,
+                         seed=args.seed, l2=args.l2)
+    try:
+        info = mgr.ensure(force=args.force)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+    state = "retrained" if info.retrained else "up to date"
+    print(f"[tuna] learned {info.path}: version {info.version}, "
+          f"{info.samples} samples ({info.skipped} rows skipped; {state}; "
+          f"latest -> {info.name})")
+    if args.publish:
+        from repro.tuna.transport import resolve_transport
+
+        t = resolve_transport(args.publish)
+        for man in mgr.publish(t, info=info):
+            print(f"[tuna] published {man.name} ({man.size}B, "
+                  f"sha1 {man.sha1[:12]}) -> {t.describe()}")
+    return 0
+
+
+def cmd_eval(args: argparse.Namespace) -> int:
+    from repro.core.learned import load_ranker, spearman
+    from repro.tuna.cache import StaleSnapshotError
+    from repro.tuna.learned import (build_dataset, iter_log_records,
+                                    training_rows)
+
+    try:
+        model = load_ranker(args.model)
+    except (StaleSnapshotError, ValueError, FileNotFoundError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+    rows = training_rows(iter_log_records(args.db))
+    X, y, groups, skipped = build_dataset(rows)
+    if len(y) < 3:
+        print(f"error: {args.db}: only {len(y)} usable eval sample(s) "
+              f"({skipped} skipped)", file=sys.stderr)
+        return 1
+    import math
+
+    import numpy as np
+
+    preds = model.predict(X)
+    logy = np.log(np.maximum(y, 1e-30))
+    per_group = {}
+    for g in sorted(set(groups)):
+        m = np.asarray([gi == g for gi in groups])
+        if m.sum() >= 3:
+            per_group[g] = spearman(preds[m], logy[m])
+    print(f"[tuna] eval {args.model}: version {model.version}, "
+          f"{len(y)} samples, {len(per_group)} group(s)")
+    for g, rho in sorted(per_group.items()):
+        print(f"  spearman={rho:+.3f}  {g}")
+    if not per_group:
+        print("error: no group has >= 3 samples to rank", file=sys.stderr)
+        return 1
+    mean_rho = sum(per_group.values()) / len(per_group)
+    print(f"[tuna] mean spearman {mean_rho:+.3f} "
+          f"(rank correlation, 1.0 = perfect ordering)")
+    if args.check and (math.isnan(mean_rho)
+                       or mean_rho < args.min_spearman):
+        print(f"CHECK FAILED: mean spearman {mean_rho:.3f} < "
+              f"{args.min_spearman}", file=sys.stderr)
+        return 1
+    if args.check:
+        print(f"CHECK OK: mean spearman {mean_rho:.3f} >= "
+              f"{args.min_spearman}")
+    return 0
 
 
 def _shard_siblings(db_path: str) -> List[str]:
@@ -565,6 +653,12 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--publish", default=None, metavar="SPEC",
                    help="transport to publish snapshots over (what serving "
                         "hosts' refresh_default_cache watches)")
+    p.add_argument("--learned-dir", default=None, metavar="OUT_DIR",
+                   help="retrain + republish the learned ranker "
+                        "(repro.tuna.learned.LearnedManager) into this "
+                        "directory whenever the store's training content "
+                        "changes — same ensure-on-change contract as "
+                        "snapshots")
     p.add_argument("--port", type=int, default=None,
                    help="serve GET /schedule /healthz /metrics on this "
                         "port (0 = ephemeral, printed at boot; omit to "
@@ -633,6 +727,53 @@ def build_parser() -> argparse.ArgumentParser:
                    help="push the release (+ bundle) and their `latest` "
                         "pointers over this transport")
     p.set_defaults(fn=cmd_golden)
+
+    p = sub.add_parser(
+        "train",
+        help="fit the learned ranker offline from the store's log")
+    p.add_argument("--db", default=DEFAULT_DB)
+    p.add_argument("--dir", default="experiments/learned", metavar="OUT_DIR",
+                   help="artifact directory: versioned models "
+                        "(learned.<version>-<digest>.json) plus a `latest` "
+                        "pointer; retrains only when the store's training "
+                        "content or cost-model version changed")
+    p.add_argument("--augment", type=int, default=0, metavar="N",
+                   help="add up to N statically-scored configs per stored "
+                        "(op, target) — free cm1-lineage samples for "
+                        "spaces with few stored records")
+    p.add_argument("--l2", type=float, default=1e-2,
+                   help="ridge regularisation strength")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--force", action="store_true",
+                   help="retrain even if the pointed artifact is current")
+    p.add_argument("--transport", default=None, metavar="SPEC",
+                   help="pull the fleet's published shard stores (needs "
+                        "--num-shards) and merge them before training")
+    p.add_argument("--num-shards", type=int, default=0,
+                   help="fleet size for --transport pulls")
+    p.add_argument("--staging-dir", default=None,
+                   help="where transport pulls land (default <db>.staging/)")
+    p.add_argument("--ignore-shards", action="store_true",
+                   help="train on just the base store even when per-shard "
+                        "stores sit next to it (default: fail fast)")
+    p.add_argument("--publish", default=None, metavar="SPEC",
+                   help="push the artifact and its `latest` pointer over "
+                        "this transport")
+    p.set_defaults(fn=cmd_train)
+
+    p = sub.add_parser(
+        "eval",
+        help="rank-correlate a trained artifact against the store")
+    p.add_argument("--db", default=DEFAULT_DB)
+    p.add_argument("--model", default="experiments/learned/learned.latest.json",
+                   help="artifact or `latest` pointer to evaluate")
+    p.add_argument("--check", action="store_true",
+                   help="exit 1 unless mean per-group spearman >= "
+                        "--min-spearman")
+    p.add_argument("--min-spearman", type=float, default=0.5,
+                   help="gate for --check (1.0 = perfect ordering, 0 = "
+                        "random)")
+    p.set_defaults(fn=cmd_eval)
 
     p = sub.add_parser("compact", help="drop superseded log lines")
     p.add_argument("--db", default=DEFAULT_DB)

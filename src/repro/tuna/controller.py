@@ -89,6 +89,11 @@ class ControllerMetrics:
          "Snapshot ensure() calls that wrote a new versioned artifact."),
         ("snapshot_publishes_total", "counter",
          "Snapshots pushed over the publish transport."),
+        ("learned_retrains_total", "counter",
+         "Learned-ranker ensure() calls that fitted a new artifact "
+         "(store training content or cost-model version changed)."),
+        ("learned_publishes_total", "counter",
+         "Learned-ranker artifacts pushed over the publish transport."),
         ("rounds_total", "counter", "Controller loop iterations."),
         ("store_records", "gauge",
          "Best-record count of the merged store after the last sync."),
@@ -228,6 +233,8 @@ class ControllerConfig:
     transport: Optional[object] = None   # spec string or Transport instance
     snapshot_dir: Optional[str] = None   # default: <db>.snapshots/
     publish: Optional[object] = None     # transport the snapshots go out on
+    learned_dir: Optional[str] = None    # retrain + republish the learned
+    #   ranker into this directory on store content change (None = off)
     lease_s: float = 300.0
     poll_s: float = 0.5
     max_attempts: int = 3                # dispatches per shard before giving up
@@ -263,6 +270,13 @@ class FleetController:
         self.snapshot_dir = cfg.snapshot_dir or os.fspath(cfg.db) + \
             ".snapshots"
         self.manager = SnapshotManager(cfg.db, self.snapshot_dir)
+        self.learned_manager = None
+        if cfg.learned_dir:
+            from repro.tuna.learned import LearnedManager
+
+            self.learned_manager = LearnedManager(cfg.db, cfg.learned_dir)
+        self._learned_info = None
+        self._published_learned_sha: Optional[str] = None
         self.metrics = ControllerMetrics()
         self.metrics.set("shards_total", cfg.num_shards)
         self.leases: Dict[int, ShardLease] = {}
@@ -498,6 +512,34 @@ class FleetController:
             self._log(f"snapshot published: {info.name}")
         if self._cache is None or self._cache.sha1 != info.sha1:
             self._cache = ScheduleCache.load(info.path)
+        self.ensure_learned()
+
+    def ensure_learned(self) -> None:
+        """Bring the learned-ranker artifact up to date with the store —
+        the same ensure-on-change contract as snapshots: the ``latest``
+        pointer records the sha1 of the training rows the model was fitted
+        from, so ``LearnedManager.ensure`` retrains exactly when the
+        store's training content (or the cost-model version) changed. A
+        store too small to train on is not an error — it just isn't time
+        yet."""
+        if self.learned_manager is None:
+            return
+        try:
+            info = self.learned_manager.ensure()
+        except ValueError as e:
+            self._log(f"learned ranker not trainable yet: {e}")
+            return
+        self._learned_info = info
+        if info.retrained:
+            self.metrics.inc("learned_retrains_total")
+            self._log(f"learned ranker retrained: {info.name} "
+                      f"({info.samples} samples)")
+        if self.cfg.publish is not None and \
+                info.sha1 != self._published_learned_sha:
+            self.learned_manager.publish(self.cfg.publish, info=info)
+            self._published_learned_sha = info.sha1
+            self.metrics.inc("learned_publishes_total")
+            self._log(f"learned ranker published: {info.name}")
 
     @property
     def converged(self) -> bool:

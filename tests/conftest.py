@@ -21,7 +21,9 @@ def _no_default_schedule_db():
     tuner.set_default_db(None)
     tuner.set_default_cache(None)
     tuner.set_default_bundle(None)
+    tuner.set_default_learned(None)
     yield
     tuner.set_default_db(None)
     tuner.set_default_cache(None)
     tuner.set_default_bundle(None)
+    tuner.set_default_learned(None)

@@ -1,0 +1,472 @@
+"""Learned ranker: featurization, ridge fit, artifact integrity, the
+hybrid serve path in core.tuner, the LearnedManager ensure-on-change
+lifecycle, and this PR's satellite bugfixes (warm-hit default_score NaN,
+sample_space silent cap, calibrated-version lookup skew, and the
+$REPRO_TUNA_LEARNED degrade paths)."""
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import cost_model, tuner
+from repro.core.cost_model import COST_MODEL_VERSION
+from repro.core.learned import (
+    FEATURE_NAMES,
+    LearnedRanker,
+    featurize,
+    fit_ranker,
+    load_ranker,
+    measured_version,
+    save_ranker,
+    space_from_signature,
+    spearman,
+)
+from repro.core.spaces import MatmulSpace, Space
+from repro.hw import get_target
+from repro.tuna.cache import StaleSnapshotError, StaleSnapshotWarning
+from repro.tuna.db import ScheduleDatabase, ScheduleRecord
+from repro.tuna.learned import (
+    LearnedManager,
+    build_dataset,
+    iter_log_records,
+    train_from_store,
+    training_rows,
+    training_sha1,
+)
+
+CPU = get_target("cpu_avx2")
+TPU = get_target("tpu_v5e")
+
+
+def _space() -> MatmulSpace:
+    return MatmulSpace(64, 64, 64, 4, target_kind="cpu")
+
+
+def _fit_synthetic(space=None, target=CPU, n=80, seed=0):
+    """A ranker fitted on scores that are exactly log-linear in the
+    feature vector — the fit must recover the ordering."""
+    space = space or _space()
+    cfgs = list(space.enumerate(space.size()))[:n]
+    X = np.stack([featurize(space, target, c) for c in cfgs])
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal(X.shape[1])
+    y = np.exp((X - X.mean(0)) / (X.std(0) + 1e-9) @ w * 0.1)
+    model = fit_ranker(X, y, ["cm1-meas"] * len(y))
+    return model, space, cfgs, X, y
+
+
+class TestFeaturesAndFit:
+    def test_featurize_finite_and_deterministic(self):
+        space = _space()
+        cfg = space.default_config()
+        v1 = featurize(space, CPU, cfg)
+        v2 = featurize(space, CPU, cfg)
+        assert v1.shape == (len(FEATURE_NAMES),)
+        assert np.all(np.isfinite(v1)) and np.array_equal(v1, v2)
+        # config knobs actually move the vector
+        other = dict(cfg)
+        other["bm"] = [b for b in space.knobs["bm"] if b != cfg["bm"]][0]
+        assert not np.array_equal(v1, featurize(space, CPU, other))
+
+    def test_fit_recovers_synthetic_ranking(self):
+        model, space, cfgs, X, y = _fit_synthetic()
+        rho = spearman(model.predict(X), np.log(y))
+        assert rho > 0.95
+
+    def test_per_lineage_standardisation_isolates_scales(self):
+        """Two lineages with wildly different score scales but the same
+        ordering must train as cleanly as one lineage would."""
+        space = _space()
+        cfgs = list(space.enumerate(space.size()))[:60]
+        X = np.stack([featurize(space, CPU, c) for c in cfgs])
+        w = np.linspace(-1, 1, X.shape[1])
+        base = np.exp((X - X.mean(0)) / (X.std(0) + 1e-9) @ w * 0.1)
+        X2 = np.concatenate([X, X])
+        y2 = np.concatenate([base, base * 1e6])  # same order, huge offset
+        lins = ["cm1"] * len(base) + ["cm1-meas"] * len(base)
+        model = fit_ranker(X2, y2, lins)
+        rho = spearman(model.predict(X), np.log(base))
+        assert rho > 0.95
+        assert model.lineages == {"cm1": 60, "cm1-meas": 60}
+
+    def test_rerank_orders_head_only(self):
+        model, space, cfgs, X, y = _fit_synthetic()
+        static = [(c, float(s)) for c, s in zip(cfgs, y)]
+        static.sort(key=lambda cs: cs[1])
+        out = model.rerank(space, CPU, static, top=10)
+        assert len(out) == len(static)
+        assert out[10:] == static[10:]          # tail untouched
+        assert sorted(map(str, out[:10])) == sorted(map(str, static[:10]))
+        preds = model.predict(
+            np.stack([featurize(space, CPU, c) for c, _ in out[:10]]))
+        assert list(preds) == sorted(preds)     # head in learned order
+
+    def test_space_from_signature_roundtrip(self):
+        from repro.configs.tuna_ops import OPERATORS
+
+        for name, make in OPERATORS.items():
+            space = make("cpu")
+            back = space_from_signature(space.signature(), CPU)
+            assert back is not None, name
+            assert back.signature() == space.signature()
+            assert back.knobs == space.knobs
+        assert space_from_signature("cell[L=4]", CPU) is None
+
+
+class TestArtifact:
+    def test_save_load_roundtrip_and_version_tag(self, tmp_path):
+        import re
+
+        model, space, cfgs, X, y = _fit_synthetic()
+        path = str(tmp_path / "m.json")
+        save_ranker(model, path)
+        back = load_ranker(path)
+        assert re.fullmatch(rf"{COST_MODEL_VERSION}\+lr[0-9a-f]{{8}}",
+                            back.version)
+        assert back.version == model.version
+        assert back.hybrid_version("cm1-cal-abc12345") == \
+            f"cm1-cal-abc12345+lr{model.fingerprint()[:8]}"
+        assert np.allclose(back.predict(X), model.predict(X))
+        assert back.lineages == model.lineages
+
+    def test_corrupt_payload_rejected(self, tmp_path):
+        model, *_ = _fit_synthetic()
+        path = str(tmp_path / "m.json")
+        save_ranker(model, path)
+        obj = json.load(open(path))
+        obj["model"]["weights"][0] += 1.0  # sha1 no longer matches
+        json.dump(obj, open(path, "w"))
+        with pytest.raises(ValueError, match="digest mismatch"):
+            load_ranker(path)
+
+    def test_fingerprint_tamper_rejected(self, tmp_path):
+        """A mis-assembled artifact whose payload digest checks out but
+        whose version tag names different parameters must refuse to load:
+        the fingerprint is re-derived from the parameters at load."""
+        import hashlib
+
+        model, *_ = _fit_synthetic()
+        path = str(tmp_path / "m.json")
+        save_ranker(model, path)
+        obj = json.load(open(path))
+        obj["model"]["weights"][0] += 1.0
+        blob = json.dumps(obj["model"], sort_keys=True, default=float)
+        obj["sha1"] = hashlib.sha1(blob.encode()).hexdigest()  # "fix" sha
+        json.dump(obj, open(path, "w"))
+        with pytest.raises(ValueError, match="fingerprint mismatch"):
+            load_ranker(path)
+
+    def test_stale_cost_model_version_rejected(self, tmp_path):
+        model, *_ = _fit_synthetic()
+        model.cost_model_version = "cm0"
+        path = str(tmp_path / "m.json")
+        save_ranker(model, path)  # self-consistent artifact, wrong cm
+        with pytest.raises(StaleSnapshotError, match="cm0"):
+            load_ranker(path)
+        with pytest.raises(StaleSnapshotError):
+            tuner.set_default_learned(path)  # explicit install: loud
+
+    def test_env_learned_missing_resolves_off(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_TUNA_LEARNED",
+                           str(tmp_path / "never_trained.json"))
+        monkeypatch.setattr(tuner, "_DEFAULT_LEARNED", tuner._UNSET)
+        assert tuner.get_default_learned() is None
+
+    def test_env_learned_stale_warns_off_and_clears_memos(self, tmp_path,
+                                                          monkeypatch):
+        """Satellite: $REPRO_TUNA_LEARNED degrades to OFF with a warning
+        AND clears the block-spec memos — mirroring the cache/bundle
+        degrade paths, so shapes memoised under an earlier model never
+        outlive its rejection."""
+        model, *_ = _fit_synthetic()
+        model.cost_model_version = "cm0"
+        stale = str(tmp_path / "stale.json")
+        save_ranker(model, stale)
+        cleared = []
+        tuner.register_memo_clearer(lambda: cleared.append(1))
+        try:
+            monkeypatch.setenv("REPRO_TUNA_LEARNED", stale)
+            monkeypatch.setattr(tuner, "_DEFAULT_LEARNED", tuner._UNSET)
+            with pytest.warns(StaleSnapshotWarning,
+                              match="REPRO_TUNA_LEARNED disabled"):
+                assert tuner.get_default_learned() is None
+            assert cleared
+        finally:
+            tuner._MEMO_CLEARERS.pop()
+
+
+class TestHybridServe:
+    def test_miss_writes_hybrid_version_then_warm_hits(self, tmp_path,
+                                                       monkeypatch):
+        model, space, *_ = _fit_synthetic()
+        path = str(tmp_path / "db.jsonl")
+        tuner.set_default_learned(model)
+        cfg, score = tuner.best_schedule(space, CPU, db=path)
+        db = ScheduleDatabase(path)
+        hv = model.hybrid_version(COST_MODEL_VERSION)
+        rec = db.best(space.signature(), CPU.name, version=hv)
+        assert rec is not None and rec.meta["strategy"] == "hybrid"
+        assert rec.config == cfg
+        # no plain-cm1 record was written for the hybrid search
+        assert db.best(space.signature(), CPU.name) is None
+
+        def boom(*a, **kw):
+            raise AssertionError("searched despite hybrid warm record")
+
+        monkeypatch.setattr(cost_model, "evaluate", boom)
+        again = tuner.best_schedule(_space(), CPU, db=path)
+        assert again == (cfg, score)
+
+    def test_hybrid_falls_back_to_plain_static_records(self, tmp_path,
+                                                       monkeypatch):
+        """Installing a learned model must not orphan existing cm1
+        records: the hybrid lineage is consulted first, plain cm1 second."""
+        space = _space()
+        path = str(tmp_path / "db.jsonl")
+        ranked = tuner.rank_space(space, CPU, limit=space.size(), db=path)
+        model, *_ = _fit_synthetic()
+        tuner.set_default_learned(model)
+
+        def boom(*a, **kw):
+            raise AssertionError("searched despite plain cm1 warm record")
+
+        monkeypatch.setattr(cost_model, "evaluate", boom)
+        cfg, score = tuner.best_schedule(_space(), CPU, db=path)
+        assert (cfg, score) == ranked[0]
+
+    def test_calibrated_version_warm_hit_regression(self, tmp_path,
+                                                    monkeypatch):
+        """Satellite (lookup-tier skew): a calibrated-coefficient write
+        must be a calibrated warm hit — before the version passthrough,
+        best_schedule always probed plain cm1 and re-searched."""
+        space = _space()
+        path = str(tmp_path / "db.jsonl")
+        coeffs = dict(cost_model.coefficients(CPU), ilp_cycles=2.0)
+        ranked = tuner.rank_space(space, CPU, limit=space.size(),
+                                  coeffs=coeffs, db=path)
+        version = tuner.record_version(coeffs)
+        assert version.startswith(f"{COST_MODEL_VERSION}-cal-")
+
+        def boom(*a, **kw):
+            raise AssertionError("searched despite calibrated warm record")
+
+        monkeypatch.setattr(cost_model, "evaluate", boom)
+        # derived from coeffs...
+        assert tuner.best_schedule(_space(), CPU, coeffs=coeffs,
+                                   db=path) == ranked[0]
+        # ...and pinned explicitly
+        assert tuner.best_schedule(_space(), CPU, version=version,
+                                   db=path) == ranked[0]
+
+    def test_warm_hit_missing_default_score_flagged(self, tmp_path,
+                                                    monkeypatch):
+        """Satellite (NaN poisoning): rank_space with the centre config
+        outside the limit stores no default_score; the warm hit must say
+        so explicitly instead of handing out a bare NaN that later
+        serializes as invalid JSON."""
+        space = MatmulSpace(1024, 1024, 1024, 2, target_kind="tpu")
+        path = str(tmp_path / "db.jsonl")
+        tuner.rank_space(space, TPU, limit=1, db=path)  # centre excluded
+        rec = ScheduleDatabase(path).best(space.signature(), TPU.name)
+        assert "default_score" not in rec.meta
+
+        res = tuner.tune(MatmulSpace(1024, 1024, 1024, 2, "tpu"), TPU,
+                         db=path)
+        assert res.from_db and res.default_score_missing
+        assert math.isnan(res.default_score)
+
+        from benchmarks.bench_json import write_bench
+
+        out = str(tmp_path / "BENCH_x.json")
+        clean = write_bench({"default_score": res.default_score,
+                             "speedup": [1.0, res.default_score],
+                             "nested": {"score": res.score}}, out)
+        back = json.load(open(out))  # strictly valid JSON round-trip
+        assert back == clean
+        assert back["default_score"] is None
+        assert back["default_score_missing"] is True
+        assert back["speedup"] == [1.0, None]
+        assert back["nested"]["score"] == pytest.approx(res.score)
+
+
+class TestSampleSpaceLimit:
+    class BigSpace(Space):
+        name = "bigspace"
+
+        def __init__(self):
+            super().__init__()
+            self.knobs = {"a": list(range(16)), "b": list(range(16)),
+                          "c": list(range(16)), "d": [0, 1]}
+
+    def test_full_space_by_default(self):
+        """Satellite (silent cap): the candidate pool used to be silently
+        truncated at 4096 regardless of space size."""
+        from benchmarks.topk_ratio import sample_space
+
+        space = self.BigSpace()
+        assert space.size() == 8192
+        pool = sample_space(space, space.size())
+        assert len(pool) == 8192  # old code: 4096
+
+    def test_explicit_limit_is_loud(self, capsys):
+        from benchmarks.topk_ratio import sample_space
+
+        space = self.BigSpace()
+        got = sample_space(space, 10, seed=3, limit=100)
+        assert len(got) == 10
+        assert "truncated to 100 of 8192" in capsys.readouterr().err
+        # an un-truncating limit stays quiet
+        sample_space(self.BigSpace(), 10, seed=3, limit=10_000)
+        assert "truncated" not in capsys.readouterr().err
+
+
+def _seed_store(path, spaces=(("cpu", 64), ("cpu", 128)), per_space=24,
+                version=None):
+    """A store whose log carries measured-lineage samples (score = static
+    cm1 score times a deterministic perturbation) for a couple of spaces."""
+    db = ScheduleDatabase(path)
+    version = version or measured_version()
+    rng = np.random.default_rng(0)
+    for kind, n in spaces:
+        space = MatmulSpace(n, n, n, 4, target_kind=kind)
+        target = CPU if kind == "cpu" else TPU
+        cfgs = list(space.enumerate(space.size()))[:per_space]
+        for cfg in cfgs:
+            s = tuner._score_config(space, target, cfg)
+            db.add(ScheduleRecord(
+                op=space.signature(), target=target.name, config=cfg,
+                score=float(s * rng.uniform(0.8, 1.25)), evaluations=1,
+                meta={"strategy": "measured_sample"}, version=version))
+    return db
+
+
+class TestTrainingAndLifecycle:
+    def test_log_not_index_is_the_training_set(self, tmp_path):
+        path = str(tmp_path / "db.jsonl")
+        db = _seed_store(path)
+        # the index keeps one winner per (op, target, version)...
+        assert len(db) == 2
+        rows = training_rows(iter_log_records(path))
+        assert len(rows) == 48  # ...but the log keeps every sample
+
+    def test_training_rows_exclude_hybrid_and_foreign(self):
+        mk = lambda v: ScheduleRecord(op="matmul[K=64,M=64,N=64,"
+                                      "dtype_bytes=4]", target="cpu_avx2",
+                                      config={}, score=1.0, version=v)
+        rows = training_rows([mk("cm1"), mk("cm1-cal-deadbeef"),
+                              mk("cm1-meas"), mk("cm1-cal-ab+lr12345678"),
+                              mk("cm1+lr12345678"), mk("cm0")])
+        assert [r.version for r in rows] == ["cm1", "cm1-cal-deadbeef",
+                                             "cm1-meas"]
+
+    def test_training_sha1_ignores_order_and_bookkeeping(self):
+        a = ScheduleRecord(op="x[]", target="t", config={"bm": 4}, score=1.0,
+                           meta={"tuned_at": 1.0, "provenance": "s0"})
+        b = ScheduleRecord(op="y[]", target="t", config={"bm": 8}, score=2.0)
+        a2 = ScheduleRecord(op="x[]", target="t", config={"bm": 4}, score=1.0,
+                            meta={"tuned_at": 999.0})
+        assert training_sha1([a, b]) == training_sha1([b, a2])
+        assert training_sha1([a]) != training_sha1([b])
+
+    def test_train_from_store_and_eval_quality(self, tmp_path):
+        path = str(tmp_path / "db.jsonl")
+        _seed_store(path, per_space=32)
+        model, tsha, samples, skipped = train_from_store(path)
+        assert samples == 64 and skipped == 0
+        assert model.lineages == {measured_version(): 64}
+        # in-sample ordering of a noisy-but-monotone target is learnable
+        rows = training_rows(iter_log_records(path))
+        X, y, groups, _ = build_dataset(rows)
+        rhos = []
+        for g in set(groups):
+            m = np.asarray([gi == g for gi in groups])
+            rhos.append(spearman(model.predict(X[m]), np.log(y[m])))
+        assert sum(rhos) / len(rhos) > 0.5
+
+    def test_manager_ensure_on_change_and_publish(self, tmp_path):
+        from repro.tuna.transport import resolve_transport
+
+        path = str(tmp_path / "db.jsonl")
+        db = _seed_store(path)
+        mgr = LearnedManager(path, str(tmp_path / "learned"))
+        info = mgr.ensure()
+        assert info.retrained and info.repointed
+        assert os.path.exists(info.path) and os.path.exists(info.latest)
+        # verified load through the pointer
+        assert load_ranker(info.latest).version == info.version
+
+        again = mgr.ensure()  # content unchanged → no-op
+        assert not again.retrained and not again.repointed
+        assert again.train_sha1 == info.train_sha1
+
+        # new training content → retrain
+        space = MatmulSpace(32, 32, 32, 4, target_kind="cpu")
+        cfg = space.default_config()
+        db.add(ScheduleRecord(
+            op=space.signature(), target=CPU.name, config=cfg,
+            score=float(tuner._score_config(space, CPU, cfg)),
+            version=measured_version()))
+        third = mgr.ensure()
+        assert third.retrained and third.train_sha1 != info.train_sha1
+
+        t = resolve_transport(f"mem://learned-{os.getpid()}")
+        manifests = mgr.publish(t)
+        assert [m.name for m in manifests] == \
+            [third.name, "learned.latest.json"]
+
+    def test_manager_refuses_empty_store(self, tmp_path):
+        path = str(tmp_path / "db.jsonl")
+        ScheduleDatabase(path).add(ScheduleRecord(
+            op="x[]", target="cpu_avx2", config={}, score=1.0,
+            version="cm0"))  # foreign lineage only
+        with pytest.raises(ValueError, match="usable training sample"):
+            LearnedManager(path, str(tmp_path / "learned")).ensure()
+
+    def test_controller_retrains_and_publishes_on_change(self, tmp_path):
+        from repro.tuna.controller import ControllerConfig, FleetController
+
+        path = str(tmp_path / "db.jsonl")
+        db = _seed_store(path)
+        bucket = f"mem://ctl-learned-{os.getpid()}"
+        cfg = ControllerConfig(
+            db=path, ops=[], targets=[], num_shards=1,
+            learned_dir=str(tmp_path / "learned"), publish=bucket,
+            quiet=True)
+        ctl = FleetController(cfg, jobs=[])
+        ctl.ensure_learned()
+        assert ctl.metrics.get("learned_retrains_total") == 1
+        assert ctl.metrics.get("learned_publishes_total") == 1
+        ctl.ensure_learned()  # no change → no retrain, no republish
+        assert ctl.metrics.get("learned_retrains_total") == 1
+        assert ctl.metrics.get("learned_publishes_total") == 1
+        space = MatmulSpace(32, 32, 32, 4, target_kind="cpu")
+        cfg2 = space.default_config()
+        db.add(ScheduleRecord(
+            op=space.signature(), target=CPU.name, config=cfg2,
+            score=float(tuner._score_config(space, CPU, cfg2)),
+            version=measured_version()))
+        ctl.ensure_learned()
+        assert ctl.metrics.get("learned_retrains_total") == 2
+        assert ctl.metrics.get("learned_publishes_total") == 2
+
+    def test_cli_train_eval_smoke(self, tmp_path, capsys):
+        from repro.tuna import cli
+
+        path = str(tmp_path / "db.jsonl")
+        _seed_store(path, per_space=32)
+        out_dir = str(tmp_path / "learned")
+        assert cli.main(["train", "--db", path, "--dir", out_dir]) == 0
+        assert "retrained" in capsys.readouterr().out
+        latest = os.path.join(out_dir, "learned.latest.json")
+        assert os.path.exists(latest)
+        assert cli.main(["train", "--db", path, "--dir", out_dir]) == 0
+        assert "up to date" in capsys.readouterr().out
+        assert cli.main(["eval", "--db", path, "--model", latest,
+                         "--check", "--min-spearman", "0.3"]) == 0
+        assert "CHECK OK" in capsys.readouterr().out
+        # an empty store is a clean CLI error, not a traceback
+        empty = str(tmp_path / "empty.jsonl")
+        open(empty, "w").close()
+        assert cli.main(["train", "--db", empty, "--dir", out_dir]) == 1
