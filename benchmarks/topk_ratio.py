@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import op_registry
 from repro.core.spaces import MatmulSpace
 from repro.core.tuner import _score_config, record_version
 from repro.hw import get_target
@@ -62,6 +63,7 @@ def topk_ratio_matmul(
     batch: int = 1, seed: int = 0, calibrated: bool = True,
     db=None, limit: Optional[int] = None,
     learned=None, rerank_top: int = 12, collect: bool = False,
+    space=None,
 ) -> Dict:
     """Returns {'ratio@k':..., 'static_s':..., 'measure_s':...}. ``batch``
     reuses the same schedule space with a leading vmap (batch_matmul).
@@ -82,6 +84,12 @@ def topk_ratio_matmul(
     ranking side by side as ``hybrid_ratio@k``/``hybrid_top1_ratio``; the
     re-rank spends zero hardware measurements (the shared ``times`` table
     covers both rankings, so equal top-k sets give exactly equal ratios).
+
+    ``space`` supplies an explicit registry-built schedule space whose
+    GEMM core is (M, N, K) — e.g. the ``moe_dispatch`` op, whose cpu knobs
+    are matmul's and whose grid factor rides in ``batch``. Records are
+    written under *that* space's signature, so registry ops get measured
+    ground truth end-to-end.
     """
     target = get_target("cpu_avx2")
     if db is not None:  # None stays off (unlike tune, no default-DB pull)
@@ -99,7 +107,8 @@ def topk_ratio_matmul(
         fitted = cached_cpu_coeffs()
         if fitted:
             coeffs = coeffs_for_scoring(fitted)
-    space = MatmulSpace(M, N, K, 4, target_kind="cpu")
+    if space is None:
+        space = MatmulSpace(M, N, K, 4, target_kind="cpu")
     cfgs = sample_space(space, n_configs, seed, limit=limit)
 
     t0 = time.perf_counter()
@@ -210,6 +219,17 @@ def operator_suite(quick: bool = True, db=None, learned=None,
     results.append(
         ("batch_matmul", topk_ratio_matmul(128, 128, 64, n, ks=(5, 10),
                                            iters=it, batch=8, **kw))
+    )
+    # registry-defined model-zoo op: MoE token-dispatch GEMM. Its cpu knobs
+    # are matmul's (bm/bn/bk/order/unroll_i) over the (C, F, D) core, and
+    # the (B, E) dispatch grid rides in the timing batch factor.
+    moe = op_registry.make_space(
+        "moe_dispatch", {"B": 2, "E": 8, "C": 128, "D": 256, "F": 512},
+        "cpu")
+    results.append(
+        ("moe_dispatch", topk_ratio_matmul(128, 512, 256, n, ks=(5, 10),
+                                           iters=it, batch=16, space=moe,
+                                           **kw))
     )
     return results
 

@@ -1,35 +1,36 @@
-"""The paper's own operator benchmark set (§V.B): the single-operator
-workloads Tuna tunes, with the shapes used by our measured CPU validation
-and the TPU static tuning demos. benchmarks/topk_ratio.py consumes these."""
-from repro.core.spaces import (
-    BatchMatmulSpace,
-    Conv2dSpace,
-    DepthwiseConv2dSpace,
-    MatmulSpace,
-)
+"""Tunable operator presets, enumerated from the declarative registry.
 
-# name -> factory(target_kind) (paper: conv2d, conv2d_winograd,
-# depthwise_conv2d, batch_matrix_multiplication; winograd is represented by
-# its GEMM core — the paper skips it on CPU targets too)
-OPERATORS = {
-    "dense_256": lambda kind="cpu": MatmulSpace(256, 256, 256, 4, kind),
-    "dense_512": lambda kind="cpu": MatmulSpace(512, 512, 512, 4, kind),
-    "conv2d": lambda kind="cpu": Conv2dSpace(1, 14, 14, 256, 256, 3, 3, 4,
-                                             kind),
-    "depthwise_conv2d": lambda kind="cpu": DepthwiseConv2dSpace(
-        1, 28, 28, 128, 3, 3, 4, kind),
-    "batch_matmul": lambda kind="cpu": BatchMatmulSpace(8, 128, 128, 64, 4,
-                                                        kind),
-    # bf16 TPU matmul shapes the kernel block-spec picker asks for at trace
-    # time — tuning these warms the DB that tuned_matmul_blocks consults
-    "matmul_1024_bf16": lambda kind="tpu": MatmulSpace(1024, 1024, 1024, 2,
-                                                       kind),
-    "matmul_2048_bf16": lambda kind="tpu": MatmulSpace(2048, 2048, 2048, 2,
-                                                       kind),
-    "matmul_4096_bf16": lambda kind="tpu": MatmulSpace(4096, 4096, 4096, 2,
-                                                       kind),
+Historically this file hand-listed the paper's §V.B operator benchmark set
+against the four ``Space`` subclasses. It is now a thin enumeration of
+``repro.core.op_registry``: every registered :class:`OpDef` preset becomes a
+named ``OPERATORS`` entry (``name -> factory(target_kind)``), so registering
+a new op family (see ``repro.core.zoo``) automatically widens the tuning
+matrix, the fleet job grid and the benchmarks."""
+from typing import Callable, Dict
+
+from repro.core import op_registry
+from repro.core.op_registry import Space
+
+
+def _factory(family: str, preset: op_registry.Preset,
+             ) -> Callable[..., Space]:
+    def make(kind: str = preset.kind) -> Space:
+        return op_registry.make_space(family, preset.attrs, kind)
+    make.__name__ = f"make_{family}"
+    return make
+
+
+# name -> factory(target_kind), in registry order: the paper set first
+# (matmul/conv/depthwise/bmm — winograd is represented by its GEMM core; the
+# paper skips it on CPU targets too), then the model-zoo families.
+OPERATORS: Dict[str, Callable[..., Space]] = {
+    name: _factory(family, preset)
+    for name, (family, preset) in op_registry.all_presets().items()
 }
 
 # small fixed subset exercised by `python -m repro.tuna tune --smoke`
 # (CI cold-start check: one matmul + one batched space, seconds to tune)
 SMOKE_OPERATORS = ("dense_256", "batch_matmul")
+
+# one preset per model-zoo family (CI zoo-smoke tunes these on all targets)
+ZOO_OPERATORS = ("moe_dispatch", "ssm_scan", "mlstm_chunk", "flash_gqa")

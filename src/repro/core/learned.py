@@ -49,15 +49,9 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import cost_model
+from repro.core import cost_model, op_registry
 from repro.core.cost_model import COST_MODEL_VERSION
-from repro.core.spaces import (
-    BatchMatmulSpace,
-    Conv2dSpace,
-    DepthwiseConv2dSpace,
-    MatmulSpace,
-    Space,
-)
+from repro.core.op_registry import Space
 from repro.hw.target import HardwareTarget
 
 LEARNED_SCHEMA = "tuna-learned-v1"
@@ -69,21 +63,20 @@ _STATIC_LOG = ("ilp_cycles", "movement_bytes", "unhidden_dma_cycles",
                "arith_ops", "ldst_ops", "dispatch_calls", "parallel_extent",
                "vmem_overflow")
 _STATIC_RAW = ("alignment_waste", "occupancy_penalty")
-# Config-dict knob features (0 when a space has no such knob).
-_KNOB_LOG2 = ("bm", "bn", "bk", "b_oc", "b_ow", "b_ic", "b_c")
-_KNOB_RAW = ("unroll_i",)
-_KNOB_FLAGS = ("double_buffer",)
-_ORDER_CHOICES = ("ikj", "kij", "ijk")
+# Config-dict knob features (0 when a space has no such knob): the union of
+# every registered OpDef's declared KnobFeatures, group-major (log2 tile
+# sizes | raw counts | flags | choice one-hots). Legacy families register
+# first, so the historical column layout is a stable prefix and new op
+# families extend each group; models saved under an older layout are
+# re-aligned by name at predict time.
+KNOB_FEATURES = op_registry.knob_feature_union()
 # Graph-level hlo_features counts (records carrying meta["hlo"]).
 _HLO_COUNTS = ("n_fusions", "n_dots", "n_layout_ops", "n_while")
 
 FEATURE_NAMES: Tuple[str, ...] = (
     tuple(f"log_{n}" for n in _STATIC_LOG)
     + _STATIC_RAW
-    + tuple(f"log2_{n}" for n in _KNOB_LOG2)
-    + _KNOB_RAW
-    + _KNOB_FLAGS
-    + tuple(f"order_{o}" for o in _ORDER_CHOICES)
+    + tuple(n for kf in KNOB_FEATURES for n in kf.feature_names())
     + tuple(f"hlo_{n}" for n in _HLO_COUNTS)
 )
 
@@ -99,14 +92,17 @@ def featurize(space: Space, target: HardwareTarget, cfg: Dict,
     row: List[float] = [math.log1p(max(0.0, float(f[n])))
                         for n in _STATIC_LOG]
     row += [float(f[n]) for n in _STATIC_RAW]
-    for knob in _KNOB_LOG2:
-        v = cfg.get(knob)
-        row.append(math.log2(v) if isinstance(v, (int, float)) and v > 0
-                   else 0.0)
-    row += [float(cfg.get(k, 0) or 0) for k in _KNOB_RAW]
-    row += [1.0 if cfg.get(k) else 0.0 for k in _KNOB_FLAGS]
-    order = cfg.get("order")
-    row += [1.0 if order == o else 0.0 for o in _ORDER_CHOICES]
+    for kf in KNOB_FEATURES:
+        v = cfg.get(kf.name)
+        if kf.kind == "log2":
+            row.append(math.log2(v) if isinstance(v, (int, float)) and v > 0
+                       else 0.0)
+        elif kf.kind == "raw":
+            row.append(float(v or 0))
+        elif kf.kind == "flag":
+            row.append(1.0 if v else 0.0)
+        else:  # choice one-hot
+            row += [1.0 if v == c else 0.0 for c in kf.choices]
     row += list(hlo_counts(hlo_text))
     return np.asarray(row, dtype=np.float64)
 
@@ -124,51 +120,14 @@ def hlo_counts(hlo_text: Optional[str]) -> Tuple[float, ...]:
 
 # -- op-signature round trip -------------------------------------------------
 
-_SPACE_FAMILIES = {
-    "matmul": MatmulSpace,
-    "batch_matmul": BatchMatmulSpace,
-    "conv2d": Conv2dSpace,
-    "depthwise_conv2d": DepthwiseConv2dSpace,
-}
-
-
-def _sig_fields(sig: str) -> Tuple[str, Dict[str, int]]:
-    name, _, body = sig.partition("[")
-    fields: Dict[str, int] = {}
-    for part in body.rstrip("]").split(","):
-        if "=" in part:
-            k, _, v = part.partition("=")
-            fields[k.strip()] = int(v)
-    return name, fields
-
 
 def space_from_signature(sig: str,
                          target: HardwareTarget) -> Optional[Space]:
     """Reconstruct the schedule space a record's op signature came from
-    (inverse of ``Space.signature``). None for op families this module
-    cannot rebuild (e.g. graph-level ``cell[...]`` records) — those rows
-    are skipped by the trainer, they don't fail it."""
-    name, f = _sig_fields(sig)
-    cls = _SPACE_FAMILIES.get(name)
-    if cls is None:
-        return None
-    kind = target.kind
-    try:
-        if cls is MatmulSpace:
-            return MatmulSpace(f["M"], f["N"], f["K"],
-                               f.get("dtype_bytes", 4), kind)
-        if cls is BatchMatmulSpace:
-            return BatchMatmulSpace(f["Bsz"], f["M"], f["N"], f["K"],
-                                    f.get("dtype_bytes", 4), kind)
-        if cls is Conv2dSpace:
-            return Conv2dSpace(f["N"], f["H"], f["W"], f["Cin"], f["Cout"],
-                               f.get("KH", 3), f.get("KW", 3),
-                               f.get("dtype_bytes", 4), kind)
-        return DepthwiseConv2dSpace(f["N"], f["H"], f["W"], f["C"],
-                                    f.get("KH", 3), f.get("KW", 3),
-                                    f.get("dtype_bytes", 4), kind)
-    except KeyError:
-        return None
+    (inverse of ``Space.signature``), via the operator registry. None for
+    op families the registry does not know (e.g. graph-level ``cell[...]``
+    records) — those rows are skipped by the trainer, they don't fail it."""
+    return op_registry.space_from_signature(sig, target.kind)
 
 
 def lineage_of(version: str) -> str:
@@ -231,9 +190,27 @@ class LearnedRanker:
         return self.hybrid_version(self.cost_model_version)
 
     def predict(self, X: np.ndarray) -> np.ndarray:
-        X = np.atleast_2d(np.asarray(X, dtype=np.float64))
+        X = self._align(np.atleast_2d(np.asarray(X, dtype=np.float64)))
         Z = (X - self.mean) / self.std
         return Z @ self.weights + self.bias
+
+    def _align(self, X: np.ndarray) -> np.ndarray:
+        """Project rows laid out as today's ``FEATURE_NAMES`` onto the
+        layout this model was trained with. Registering a new op family
+        inserts knob columns; a model from before the registration keeps
+        working — its known columns are matched by name, its unknown ones
+        (none, for an insert-only change) read as zero."""
+        if self.feature_names == FEATURE_NAMES:
+            return X
+        if X.shape[1] != len(FEATURE_NAMES):
+            return X  # caller already built rows in the model's own layout
+        idx = {n: i for i, n in enumerate(FEATURE_NAMES)}
+        out = np.zeros((X.shape[0], len(self.feature_names)))
+        for j, name in enumerate(self.feature_names):
+            i = idx.get(name)
+            if i is not None:
+                out[:, j] = X[:, i]
+        return out
 
     def score_config(self, space: Space, target: HardwareTarget,
                      cfg: Dict) -> float:

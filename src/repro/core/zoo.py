@@ -1,0 +1,398 @@
+"""Model-zoo operator families registered with the declarative registry.
+
+The paper's §V.B set (matmul / conv / depthwise / bmm, registered by
+:mod:`repro.core.spaces`) only covers classic CNN-era workloads, but the
+repo's ``models/`` already runs MoE dispatch, SSM scans, mLSTM recurrences
+and GQA attention.  This module registers those hot loops as first-class
+tunable ops so the (op family × target) matrix the tuner, learned ranker and
+fleet sweep actually spans the model zoo:
+
+  * ``moe_dispatch`` — the per-(batch, expert) token GEMM behind
+    ``models/moe.py``'s dispatch: C tokens of width D against an expert FFN
+    of width F, wrapped in a (B, E) parallel grid.
+  * ``ssm_scan``     — ``models/ssm.py``'s chunked selective scan: per chunk,
+    a state update H[n,d] += B[t,n]·X[t,d] and an output contraction
+    Y[t,d] += C[t,n]·H[n,d], tiled over (chunk, b_d).
+  * ``mlstm_chunk``  — ``models/xlstm.py``'s chunkwise mLSTM recurrence:
+    per R-row chunk an (R×R) score GEMM then an (R×dh) output GEMM, tiled
+    over (br, bh).
+  * ``flash`` / ``flash_gqa`` — attention-variant spaces whose knobs are
+    exactly ``kernels/flash_attention.py``'s ``block_q``/``block_k`` grid;
+    ``flash`` keeps the historical single-head signature the block-spec
+    picker and golden bundles already use, ``flash_gqa`` adds head-group and
+    causal attributes.
+
+Importing this module (or calling any registry API) makes the families
+available; ``repro.core.spaces`` always registers first so the legacy
+learned-ranker feature columns stay a stable prefix.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.core.cost_model import ScheduleMeta
+from repro.core.op_registry import (
+    DTYPE_BY_BYTES,
+    AttrSpec,
+    BundleSkip,
+    BundleSpec,
+    KnobFeature,
+    OpDef,
+    Preset,
+    register,
+)
+from repro.core.spaces import (
+    MATMUL_KNOB_FEATURES,
+    _build_matmul,
+    _divisors_pow2,
+    _matmul_knobs,
+    _wrap_parallel,
+)
+from repro.core.tir import Access, Compute, LinExpr, Loop, Program, TensorDecl
+
+__all__ = [
+    "MOE_DISPATCH_DEF",
+    "SSM_SCAN_DEF",
+    "MLSTM_CHUNK_DEF",
+    "FLASH_DEF",
+    "FLASH_GQA_DEF",
+]
+
+_STAGED = ("tpu", "gpu")  # kinds with an explicit fast-memory staging loop
+
+
+# ---------------------------------------------------------------------------
+# MoE token-dispatch GEMM
+# ---------------------------------------------------------------------------
+
+
+def _moe_matmul_attrs(attrs: Dict) -> Dict:
+    return {"M": attrs["C"], "N": attrs["F"], "K": attrs["D"],
+            "dtype_bytes": attrs["dtype_bytes"]}
+
+
+def _moe_knobs(attrs: Dict, kind: str) -> Dict[str, List]:
+    return _matmul_knobs(_moe_matmul_attrs(attrs), kind)
+
+
+def _build_moe_dispatch(attrs: Dict, cfg: Dict,
+                        kind: str) -> Tuple[Program, ScheduleMeta]:
+    prog, meta = _build_matmul(_moe_matmul_attrs(attrs), cfg, kind)
+    B, E = attrs["B"], attrs["E"]
+    return _wrap_parallel(prog, meta, (("b", B), ("e", E)),
+                          f"moe_dispatch_{B}x{E}x{attrs['C']}")
+
+
+MOE_DISPATCH_DEF = register(OpDef(
+    name="moe_dispatch",
+    attrs=(AttrSpec("B"), AttrSpec("E"), AttrSpec("C"), AttrSpec("D"),
+           AttrSpec("F"), AttrSpec("dtype_bytes", int, 4)),
+    knob_fn=_moe_knobs,
+    build_fn=_build_moe_dispatch,
+    knob_features=MATMUL_KNOB_FEATURES,
+    presets={
+        "moe_dispatch": Preset(
+            {"B": 2, "E": 8, "C": 128, "D": 256, "F": 512}, "cpu"),
+    },
+    doc="per-(batch, expert) token GEMM: Y[b,e,C,F] += X[b,e,C,D] @ W[b,e,D,F]",
+))
+
+
+# ---------------------------------------------------------------------------
+# SSM chunked selective scan
+# ---------------------------------------------------------------------------
+
+
+def _ssm_knobs(attrs: Dict, kind: str) -> Dict[str, List]:
+    knobs: Dict[str, List] = {
+        "chunk": _divisors_pow2(attrs["S"], 8, 256),
+        "b_d": _divisors_pow2(attrs["D"], 8, 512),
+    }
+    if kind in _STAGED:
+        knobs["double_buffer"] = [False, True]
+    return knobs
+
+
+def _build_ssm_scan(attrs: Dict, cfg: Dict,
+                    kind: str) -> Tuple[Program, ScheduleMeta]:
+    S, D, N, db = attrs["S"], attrs["D"], attrs["N"], attrs["dtype_bytes"]
+    chunk, b_d = cfg["chunk"], cfg["b_d"]
+    X = TensorDecl("X", (S, D), db)
+    Bm = TensorDecl("Bm", (S, N), db)
+    Cm = TensorDecl("Cm", (S, N), db)
+    Hs = TensorDecl("H", (N, D), db)
+    Y = TensorDecl("Y", (S, D), db)
+    row = LinExpr.of(("ci", chunk), ("tu", 1))
+    col = LinExpr.of(("dt", b_d), ("dv", 1))
+    # state update: H[n, d] += Bm[t, n] * X[t, d]
+    upd = Compute(
+        "fma",
+        output=Access("H", (LinExpr.var("n"), col), is_store=True),
+        inputs=(Access("Bm", (row, LinExpr.var("n"))),
+                Access("X", (row, col))),
+    )
+    row_o = LinExpr.of(("ci", chunk), ("to", 1))
+    col_o = LinExpr.of(("dt", b_d), ("dw", 1))
+    # output contraction: Y[t, d] += Cm[t, n] * H[n, d]
+    out = Compute(
+        "fma",
+        output=Access("Y", (row_o, col_o), is_store=True),
+        inputs=(Access("Cm", (row_o, LinExpr.var("no"))),
+                Access("H", (LinExpr.var("no"), col_o))),
+    )
+    upd_nest = Loop("tu", chunk, (Loop("n", N, (Loop(
+        "dv", b_d, (upd,), "vector"),), "serial"),), "serial")
+    out_nest = Loop("to", chunk, (Loop("no", N, (Loop(
+        "dw", b_d, (out,), "vector"),), "serial"),), "serial")
+    dt = Loop("dt", D // b_d, (upd_nest, out_nest), "serial")
+    ci = Loop("ci", S // chunk, (dt,),
+              "block" if kind in _STAGED else "serial")
+    prog = Program((X, Bm, Cm, Hs, Y), (ci,),
+                   name=f"ssm_scan_{S}x{D}x{N}")
+    meta = ScheduleMeta(
+        grid_size=(S // chunk) * (D // b_d),
+        parallel_extent=D // b_d,  # the scan itself is serial over chunks
+        vmem_tile_bytes=(chunk * b_d + 2 * chunk * N + N * b_d) * db,
+        double_buffer=bool(cfg.get("double_buffer", False)),
+    )
+    return _wrap_parallel(prog, meta, (("b", attrs["B"]),),
+                          f"ssm_scan_{attrs['B']}x{S}x{D}")
+
+
+SSM_SCAN_DEF = register(OpDef(
+    name="ssm_scan",
+    attrs=(AttrSpec("B"), AttrSpec("S"), AttrSpec("D"), AttrSpec("N"),
+           AttrSpec("dtype_bytes", int, 4)),
+    knob_fn=_ssm_knobs,
+    build_fn=_build_ssm_scan,
+    knob_features=(
+        KnobFeature("chunk", "log2"),
+        KnobFeature("b_d", "log2"),
+        KnobFeature("double_buffer", "flag"),
+    ),
+    presets={
+        "ssm_scan": Preset({"B": 2, "S": 512, "D": 256, "N": 16}, "cpu"),
+    },
+    doc="chunked selective scan: H += B·X per chunk, Y += C·H",
+))
+
+
+# ---------------------------------------------------------------------------
+# mLSTM chunkwise recurrence
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_knobs(attrs: Dict, kind: str) -> Dict[str, List]:
+    knobs: Dict[str, List] = {
+        "br": _divisors_pow2(attrs["R"], 8, 128),
+        "bh": _divisors_pow2(attrs["dh"], 8, 128),
+    }
+    if kind in _STAGED:
+        knobs["double_buffer"] = [False, True]
+    return knobs
+
+
+def _build_mlstm_chunk(attrs: Dict, cfg: Dict,
+                       kind: str) -> Tuple[Program, ScheduleMeta]:
+    S, R, dh = attrs["S"], attrs["R"], attrs["dh"]
+    db = attrs["dtype_bytes"]
+    br, bh = cfg["br"], cfg["bh"]
+    Q = TensorDecl("Q", (S, dh), db)
+    K = TensorDecl("K", (S, dh), db)
+    V = TensorDecl("V", (S, dh), db)
+    Sc = TensorDecl("Sc", (S, R), 4)   # f32 score chunk
+    O = TensorDecl("O", (S, dh), db)
+    q_row = LinExpr.of(("ci", R), ("rt", br), ("tm", 1))
+    # scores: Sc[q, r] += Q[q, :] · K[ci*R + r, :]
+    score = Compute(
+        "fma",
+        output=Access("Sc", (q_row, LinExpr.var("tn")), is_store=True),
+        inputs=(Access("Q", (q_row, LinExpr.var("tk"))),
+                Access("K", (LinExpr.of(("ci", R), ("tn", 1)),
+                             LinExpr.var("tk")))),
+    )
+    score_nest = Loop("tm", br, (Loop("tn", R, (Loop(
+        "tk", dh, (score,), "tensor.k"),), "tensor.n"),), "tensor.m")
+    o_row = LinExpr.of(("ci", R), ("rt", br), ("om", 1))
+    o_col = LinExpr.of(("ht", bh), ("on", 1))
+    # output: O[q, h] += Sc[q, r] * V[ci*R + r, h]
+    outc = Compute(
+        "fma",
+        output=Access("O", (o_row, o_col), is_store=True),
+        inputs=(Access("Sc", (o_row, LinExpr.var("ok"))),
+                Access("V", (LinExpr.of(("ci", R), ("ok", 1)), o_col))),
+    )
+    out_nest = Loop("om", br, (Loop("on", bh, (Loop(
+        "ok", R, (outc,), "tensor.k"),), "tensor.n"),), "tensor.m")
+    ht = Loop("ht", dh // bh, (out_nest,), "serial")
+    rt = Loop("rt", R // br, (score_nest, ht), "serial")
+    ci = Loop("ci", S // R, (rt,),
+              "block" if kind in _STAGED else "serial")
+    prog = Program((Q, K, V, Sc, O), (ci,), name=f"mlstm_chunk_{S}x{R}x{dh}")
+    meta = ScheduleMeta(
+        grid_size=S // R,
+        parallel_extent=1,  # the chunk recurrence is serial
+        vmem_tile_bytes=(3 * R * dh) * db + R * R * 4,
+        double_buffer=bool(cfg.get("double_buffer", False)),
+    )
+    return _wrap_parallel(prog, meta,
+                          (("b", attrs["B"]), ("h", attrs["H"])),
+                          f"mlstm_{attrs['B']}x{attrs['H']}x{S}")
+
+
+MLSTM_CHUNK_DEF = register(OpDef(
+    name="mlstm_chunk",
+    attrs=(AttrSpec("B"), AttrSpec("H"), AttrSpec("S"), AttrSpec("R"),
+           AttrSpec("dh"), AttrSpec("dtype_bytes", int, 4)),
+    knob_fn=_mlstm_knobs,
+    build_fn=_build_mlstm_chunk,
+    knob_features=(
+        KnobFeature("br", "log2"),
+        KnobFeature("bh", "log2"),
+        KnobFeature("double_buffer", "flag"),
+    ),
+    presets={
+        "mlstm_chunk": Preset(
+            {"B": 1, "H": 4, "S": 512, "R": 64, "dh": 64}, "cpu"),
+    },
+    doc="chunkwise mLSTM: per chunk an RxR score GEMM then an Rxdh out GEMM",
+))
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (single-head legacy signature) and GQA variant
+# ---------------------------------------------------------------------------
+
+
+def _flash_knobs(attrs: Dict, kind: str) -> Dict[str, List]:
+    # exactly the kernels/flash_attention.py grid knobs — the block-spec
+    # picker and golden bundles consume these keys verbatim
+    s = attrs["s"]
+    return {
+        "block_q": _divisors_pow2(s, 128, 1024),
+        "block_k": _divisors_pow2(s, 128, 1024),
+    }
+
+
+def _build_flash(attrs: Dict, cfg: Dict,
+                 kind: str) -> Tuple[Program, ScheduleMeta]:
+    s, d, db = attrs["s"], attrs["d"], attrs["dtype_bytes"]
+    hq = attrs.get("hq", 1)
+    bq, bk = cfg["block_q"], cfg["block_k"]
+    # one head's online-softmax tile stream; heads only scale the grid
+    Q = TensorDecl("Q", (s, d), db)
+    K = TensorDecl("K", (s, d), db)
+    V = TensorDecl("V", (s, d), db)
+    P = TensorDecl("P", (s, bk), 4)    # f32 probability tile
+    O = TensorDecl("O", (s, d), db)
+    q_row = LinExpr.of(("qi", bq), ("tm", 1))
+    score = Compute(
+        "fma",
+        output=Access("P", (q_row, LinExpr.var("tn")), is_store=True),
+        inputs=(Access("Q", (q_row, LinExpr.var("tk"))),
+                Access("K", (LinExpr.of(("ki", bk), ("tn", 1)),
+                             LinExpr.var("tk")))),
+    )
+    score_nest = Loop("tm", bq, (Loop("tn", bk, (Loop(
+        "tk", d, (score,), "tensor.k"),), "tensor.n"),), "tensor.m")
+    e_row = LinExpr.of(("qi", bq), ("te", 1))
+    expc = Compute(
+        "exp",
+        output=Access("P", (e_row, LinExpr.var("tj")), is_store=True),
+        inputs=(Access("P", (e_row, LinExpr.var("tj"))),),
+    )
+    exp_nest = Loop("te", bq, (Loop("tj", bk, (expc,), "vector"),), "serial")
+    o_row = LinExpr.of(("qi", bq), ("om", 1))
+    outc = Compute(
+        "fma",
+        output=Access("O", (o_row, LinExpr.var("on")), is_store=True),
+        inputs=(Access("P", (o_row, LinExpr.var("ok"))),
+                Access("V", (LinExpr.of(("ki", bk), ("ok", 1)),
+                             LinExpr.var("on")))),
+    )
+    out_nest = Loop("om", bq, (Loop("on", d, (Loop(
+        "ok", bk, (outc,), "tensor.k"),), "tensor.n"),), "tensor.m")
+    ki = Loop("ki", s // bk, (score_nest, exp_nest, out_nest),
+              "block" if kind in _STAGED else "serial")
+    qi = Loop("qi", s // bq, (ki,), "serial")
+    prog = Program((Q, K, V, P, O), (qi,), name=f"flash_{hq}x{s}x{d}")
+    # mirrors the kernels/ops.py VMEM estimate: q/o blocks + k/v blocks +
+    # the m/l softmax carries and the probability tile
+    vmem = (bq * d + 2 * bk * d + bq * d) * db + bq * (2 * 128 + bk) * 4
+    meta = ScheduleMeta(
+        grid_size=hq * (s // bq) * (s // bk),
+        parallel_extent=hq * (s // bq),
+        vmem_tile_bytes=vmem,
+        double_buffer=False,
+    )
+    return prog, meta
+
+
+def _flash_bundle(attrs: Dict, config: Dict) -> BundleSpec:
+    dtype = DTYPE_BY_BYTES.get(attrs["dtype_bytes"])
+    if dtype is None:
+        raise BundleSkip("unsupported dtype_bytes")
+    if not {"block_q", "block_k"} <= set(config):
+        raise BundleSkip("no block_q/block_k in config")
+    s, d = attrs["s"], attrs["d"]
+    shape = (1, 1, s, d)   # canonical single-head, batch-1 layout
+    return BundleSpec("flash", ((shape, dtype),) * 3,
+                      {"causal": True, "scale": d ** -0.5})
+
+
+FLASH_DEF = register(OpDef(
+    name="flash",
+    attrs=(AttrSpec("s"), AttrSpec("d"), AttrSpec("dtype_bytes", int, 2)),
+    knob_fn=_flash_knobs,
+    build_fn=_build_flash,
+    bundle_fn=_flash_bundle,
+    knob_features=(
+        KnobFeature("block_q", "log2"),
+        KnobFeature("block_k", "log2"),
+    ),
+    presets={
+        "flash_1024": Preset({"s": 1024, "d": 64}, "tpu"),
+    },
+    doc="single-head flash attention block grid (legacy picker signature)",
+))
+
+
+def _gqa_bundle(attrs: Dict, config: Dict) -> BundleSpec:
+    dtype = DTYPE_BY_BYTES.get(attrs["dtype_bytes"])
+    if dtype is None:
+        raise BundleSkip("unsupported dtype_bytes")
+    if not {"block_q", "block_k"} <= set(config):
+        raise BundleSkip("no block_q/block_k in config")
+    s, d = attrs["s"], attrs["d"]
+    hq, hkv = attrs["hq"], attrs["hkv"]
+    if hq % hkv:
+        raise BundleSkip("hq must be a multiple of hkv")
+    q_aval = ((1, hq, s, d), dtype)
+    kv_aval = ((1, hkv, s, d), dtype)
+    return BundleSpec("flash", (q_aval, kv_aval, kv_aval),
+                      {"causal": attrs["causal"], "scale": d ** -0.5})
+
+
+def _gqa_build(attrs: Dict, cfg: Dict,
+               kind: str) -> Tuple[Program, ScheduleMeta]:
+    return _build_flash(attrs, cfg, kind)
+
+
+FLASH_GQA_DEF = register(OpDef(
+    name="flash_gqa",
+    attrs=(AttrSpec("s"), AttrSpec("d"), AttrSpec("hq"), AttrSpec("hkv"),
+           AttrSpec("causal", bool, True),
+           AttrSpec("dtype_bytes", int, 2)),
+    knob_fn=_flash_knobs,
+    build_fn=_gqa_build,
+    bundle_fn=_gqa_bundle,
+    knob_features=(
+        KnobFeature("block_q", "log2"),
+        KnobFeature("block_k", "log2"),
+    ),
+    presets={
+        "flash_gqa": Preset(
+            {"s": 512, "d": 64, "hq": 8, "hkv": 2, "causal": True}, "tpu"),
+    },
+    doc="grouped-query flash attention: hq query heads over hkv kv heads",
+))

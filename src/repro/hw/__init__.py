@@ -7,8 +7,9 @@ constraint).
 from repro.hw.target import HardwareTarget, FunctionalUnit
 from repro.hw.tpu_v5e import TPU_V5E
 from repro.hw.cpu_avx2 import CPU_AVX2
+from repro.hw.gpu_a100 import GPU_A100
 
-TARGETS = {t.name: t for t in (TPU_V5E, CPU_AVX2)}
+TARGETS = {t.name: t for t in (TPU_V5E, CPU_AVX2, GPU_A100)}
 
 
 def get_target(name: str) -> HardwareTarget:

@@ -33,9 +33,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import tuner
+from repro.core import op_registry, tuner
 from repro.core.tuner import rank_space, tuned_matmul_blocks
-from repro.core.spaces import MatmulSpace
 from repro.hw import get_target
 from repro.kernels import ref
 from repro.kernels import flash_attention as _flash_mod
@@ -114,37 +113,36 @@ def tuned_flash_blocks(
     s: int, d: int, dtype_bytes: int = 2, target_name: str = "tpu_v5e"
 ) -> Tuple[int, int]:
     """Static block_q/block_k choice for flash attention: score the induced
-    (q·kᵀ then p·v) tile working set with the matmul space's cost model."""
+    (q·kᵀ then p·v) tile working set over the registry's ``flash`` space
+    (whose knobs are exactly this kernel's grid)."""
     target = get_target(target_name)
     db = tuner.get_default_db()
-    sig = f"flash[d={d},dtype_bytes={dtype_bytes},s={s}]"
+    space = op_registry.make_space(
+        "flash", {"s": s, "d": d, "dtype_bytes": dtype_bytes}, target.kind)
+    sig = space.signature()
     rec = tuner.lookup_best(sig, target.name)  # snapshot cache, then DB
     if rec is not None:
         return rec.config["block_q"], rec.config["block_k"]
     best = (None, float("inf"))
     evals = 0
-    for bq in (128, 256, 512, 1024):
-        if s % bq or bq > s:
+    for cfg in space.enumerate(None):
+        bq, bk_ = cfg["block_q"], cfg["block_k"]
+        evals += 1
+        # tile working set: q, k, v, acc + softmax stats, double-buffered
+        vmem = (bq * d + 2 * bk_ * d + bq * d) * dtype_bytes + bq * (
+            2 * 128 + bk_
+        ) * 4
+        if 2 * vmem > target.fast_mem_bytes:
             continue
-        for bk_ in (128, 256, 512, 1024):
-            if s % bk_ or bk_ > s:
-                continue
-            evals += 1
-            # tile working set: q, k, v, acc + softmax stats, double-buffered
-            vmem = (bq * d + 2 * bk_ * d + bq * d) * dtype_bytes + bq * (
-                2 * 128 + bk_
-            ) * 4
-            if 2 * vmem > target.fast_mem_bytes:
-                continue
-            # per-step MXU work: bq×bk×d + bq×d×bk
-            tiles = (bq // 128 or 1) * (bk_ // 128 or 1) * max(1, d // 128)
-            dma = (bq * d + 2 * bk_ * d) * dtype_bytes
-            t = 2 * tiles * 20 / target.clock_hz + dma / target.hbm_bandwidth
-            # prefer larger tiles (fewer grid steps / revisits) on ties
-            steps = (s // bq) * (s // bk_)
-            score = t * steps
-            if score < best[1]:
-                best = ((bq, bk_), score)
+        # per-step MXU work: bq×bk×d + bq×d×bk
+        tiles = (bq // 128 or 1) * (bk_ // 128 or 1) * max(1, d // 128)
+        dma = (bq * d + 2 * bk_ * d) * dtype_bytes
+        t = 2 * tiles * 20 / target.clock_hz + dma / target.hbm_bandwidth
+        # prefer larger tiles (fewer grid steps / revisits) on ties
+        steps = (s // bq) * (s // bk_)
+        score = t * steps
+        if score < best[1]:
+            best = ((bq, bk_), score)
     blocks = best[0] or (min(512, s), min(512, s))
     if tuner._writable(db) and best[0] is not None:
         from repro.tuna.db import ScheduleRecord

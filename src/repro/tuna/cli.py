@@ -551,7 +551,7 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--db", default=DEFAULT_DB)
     p.add_argument("--ops", default="all",
                    help="comma-separated configs.tuna_ops names, or 'all'")
-    p.add_argument("--targets", default="tpu_v5e,cpu_avx2")
+    p.add_argument("--targets", default="tpu_v5e,cpu_avx2,gpu_a100")
     p.add_argument("--strategy", choices=["exhaustive", "es"],
                    default="exhaustive")
     p.add_argument("--workers", type=int, default=4)
@@ -636,7 +636,7 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--db", default=DEFAULT_DB, help="base store path")
     p.add_argument("--ops", default="all",
                    help="comma-separated configs.tuna_ops names, or 'all'")
-    p.add_argument("--targets", default="tpu_v5e,cpu_avx2")
+    p.add_argument("--targets", default="tpu_v5e,cpu_avx2,gpu_a100")
     p.add_argument("--strategy", choices=["exhaustive", "es"],
                    default="exhaustive")
     p.add_argument("--limit", type=int, default=1024)

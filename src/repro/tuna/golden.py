@@ -39,11 +39,12 @@ import dataclasses
 import hashlib
 import json
 import os
-import re
+import sys
 import tempfile
 import time
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
+from repro.core import op_registry
 from repro.core.cost_model import COST_MODEL_VERSION
 from repro.tuna.cache import (
     StaleSnapshotError,
@@ -59,7 +60,7 @@ BUNDLE_POINTER_SCHEMA = "tuna-bundle-pointer-v1"
 
 # dtype_bytes in an op signature -> concrete dtype the AOT executable is
 # compiled for (the same widths the spaces/tuner use throughout)
-_DTYPE_BY_BYTES = {2: "bfloat16", 4: "float32"}
+_DTYPE_BY_BYTES = op_registry.DTYPE_BY_BYTES
 
 
 class GoldenError(RuntimeError):
@@ -362,17 +363,6 @@ def _atomic_write_json(path: str, obj: Dict, sort_keys: bool = False,
 
 # -- AOT kernel bundles -----------------------------------------------------
 
-_MATMUL_SIG = re.compile(r"^matmul\[(.+)\]$")
-_FLASH_SIG = re.compile(r"^flash\[(.+)\]$")
-
-
-def _sig_fields(body: str) -> Dict[str, int]:
-    out = {}
-    for part in body.split(","):
-        k, _, v = part.partition("=")
-        out[k.strip()] = int(v)
-    return out
-
 
 @dataclasses.dataclass
 class BundlePlan:
@@ -387,47 +377,25 @@ class BundlePlan:
 def plan_bundle_entries(records: Iterable[ScheduleRecord],
                         ) -> Tuple[List[BundlePlan], List[Tuple[str, str]]]:
     """Partition golden records into AOT-compilable kernel plans and
-    ``(op, why)`` skips. Only the Pallas kernel families are bundleable;
-    everything else (conv spaces, cpu-knob schedules) still rides in the
-    bundle's schedule index, it just has no executable."""
+    ``(op, why)`` skips, resolving each record's op signature through the
+    operator registry (``OpDef.bundle_fn`` reconstructs shapes/dtypes — no
+    string parsing here). Families without a Pallas kernel, unparseable
+    signatures and knob-mismatched records (e.g. cpu-knob schedules) are
+    skipped with a reason; they still ride in the bundle's schedule index,
+    they just have no executable. A skip never refuses the whole release."""
     plans: List[BundlePlan] = []
     skipped: List[Tuple[str, str]] = []
     for rec in records:
-        m = _MATMUL_SIG.match(rec.op)
-        if m:
-            f = _sig_fields(m.group(1))
-            dtype = _DTYPE_BY_BYTES.get(f.get("dtype_bytes", 0))
-            if dtype is None:
-                skipped.append((rec.op, "unsupported dtype_bytes"))
-                continue
-            if not {"bm", "bn", "bk"} <= set(rec.config):
-                skipped.append((rec.op, "no TPU block schedule in config "
-                                        "(cpu-knob record)"))
-                continue
-            M, N, K = f["M"], f["N"], f["K"]
-            plans.append(BundlePlan(
-                record=rec, kernel="matmul",
-                in_avals=[((M, K), dtype), ((K, N), dtype)],
-                params={}))
+        try:
+            spec = op_registry.bundle_for(rec.op, rec.config)
+        except op_registry.BundleSkip as e:
+            skipped.append((rec.op, e.reason))
             continue
-        m = _FLASH_SIG.match(rec.op)
-        if m:
-            f = _sig_fields(m.group(1))
-            dtype = _DTYPE_BY_BYTES.get(f.get("dtype_bytes", 0))
-            if dtype is None:
-                skipped.append((rec.op, "unsupported dtype_bytes"))
-                continue
-            if not {"block_q", "block_k"} <= set(rec.config):
-                skipped.append((rec.op, "no block_q/block_k in config"))
-                continue
-            s, d = f["s"], f["d"]
-            shape = (1, 1, s, d)   # canonical single-head, batch-1 layout
-            plans.append(BundlePlan(
-                record=rec, kernel="flash",
-                in_avals=[(shape, dtype)] * 3,
-                params={"causal": True, "scale": d ** -0.5}))
-            continue
-        skipped.append((rec.op, "no Pallas kernel for this op family"))
+        plans.append(BundlePlan(
+            record=rec, kernel=spec.kernel,
+            in_avals=[(tuple(shape), dtype)
+                      for shape, dtype in spec.in_avals],
+            params=dict(spec.params)))
     return plans, skipped
 
 
@@ -507,6 +475,14 @@ def build_kernel_bundle(records: Sequence[ScheduleRecord], out_dir: str,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     plans, skipped = plan_bundle_entries(records)
+    if skipped:
+        reasons: Dict[str, int] = {}
+        for _, why in skipped:
+            reasons[why] = reasons.get(why, 0) + 1
+        detail = "; ".join(f"{n}x {why}" for why, n in sorted(reasons.items()))
+        print(f"[golden] {len(skipped)} of {len(records)} record(s) "
+              f"not bundleable, kept schedule-index-only: {detail}",
+              file=sys.stderr)
     entries = []
     for plan in plans:
         payload = _build_plan_executable(plan, interpret)
@@ -541,6 +517,7 @@ def build_kernel_bundle(records: Sequence[ScheduleRecord], out_dir: str,
         "schedule_count": len(schedules),
         "sha1": digest,
         "built_at": round(time.time(), 3),
+        "skipped_count": len(skipped),
         "skipped": [list(s) for s in skipped],
         "schedules": schedules,
         "entries": entries,

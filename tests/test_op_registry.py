@@ -1,0 +1,242 @@
+"""Declarative operator registry: OpDef-derived spaces, signatures, zoo.
+
+The compat contract this file pins: every schedule-DB record, serving
+snapshot, and golden release written before the registry refactor must keep
+loading unchanged, so the four legacy operator signatures are asserted
+byte-for-byte (satellite: signatures now serialize bool/str attrs too, and
+must not have moved the legacy ints). Plus the loud-truncation contract of
+``Space.enumerate``, generic property tests over every registered family
+(signature roundtrip, tile divisibility, well-formed ``Program``), bundling
+skip reasons, and a per-family smoke tune on all three hardware targets.
+"""
+import pytest
+
+from repro.core import cost_model, op_registry, tuner
+from repro.core.op_registry import BundleSkip, parse_signature
+from repro.core.spaces import (
+    BatchMatmulSpace,
+    Conv2dSpace,
+    DepthwiseConv2dSpace,
+    MatmulSpace,
+)
+from repro.core.tir import Loop, Program
+from repro.hw import get_target
+from repro.tuna.db import ScheduleDatabase
+
+TARGETS = ("tpu_v5e", "cpu_avx2", "gpu_a100")
+
+# Byte-for-byte pins of the pre-registry signature grammar: these strings
+# are the ``op`` keys of existing schedule DBs, snapshots, and golden
+# releases.  Changing any of them orphans stored records — bump
+# COST_MODEL_VERSION and write a migration instead.
+LEGACY_SIGNATURES = {
+    MatmulSpace(4096, 4096, 4096, 2):
+        "matmul[K=4096,M=4096,N=4096,dtype_bytes=2]",
+    BatchMatmulSpace(8, 128, 128, 64):
+        "batch_matmul[Bsz=8,K=64,M=128,N=128,dtype_bytes=4]",
+    Conv2dSpace(1, 14, 14, 256, 256):
+        "conv2d[Cin=256,Cout=256,H=14,KH=3,KW=3,N=1,W=14,dtype_bytes=4]",
+    DepthwiseConv2dSpace(1, 28, 28, 128):
+        "depthwise_conv2d[C=128,H=28,KH=3,KW=3,N=1,W=28,dtype_bytes=4]",
+}
+
+# which knob must divide which shape attr, per family (the generators are
+# all divisor-restricted; this pins that they stay so)
+DIVIDES = {
+    "matmul": {"bm": "M", "bn": "N", "bk": "K"},
+    "batch_matmul": {"bm": "M", "bn": "N", "bk": "K"},
+    "conv2d": {"b_oc": "Cout", "b_ow": "W", "b_ic": "Cin"},
+    "depthwise_conv2d": {"b_c": "C"},
+    "moe_dispatch": {"bm": "C", "bn": "F", "bk": "D"},
+    "ssm_scan": {"chunk": "S", "b_d": "D"},
+    "mlstm_chunk": {"br": "R", "bh": "dh"},
+    "flash": {"block_q": "s", "block_k": "s"},
+    "flash_gqa": {"block_q": "s", "block_k": "s"},
+}
+
+
+def _first_preset(family):
+    for name, (fam, preset) in op_registry.all_presets().items():
+        if fam == family:
+            return name, preset
+    raise AssertionError(f"family {family} has no registered preset")
+
+
+class TestLegacySignatures:
+    def test_four_legacy_signatures_byte_for_byte(self):
+        for space, sig in LEGACY_SIGNATURES.items():
+            assert space.signature() == sig
+
+    @pytest.mark.parametrize("kind", ["tpu", "cpu", "gpu"])
+    def test_signature_independent_of_target_kind(self, kind):
+        sp = MatmulSpace(512, 512, 512, 4, target_kind=kind)
+        assert sp.signature() == "matmul[K=512,M=512,N=512,dtype_bytes=4]"
+
+    def test_signature_excludes_knobs_and_bookkeeping(self):
+        sp = MatmulSpace(256, 256, 256)
+        sp._scratch = 7  # underscore attrs never leak into the signature
+        assert sp.signature() == "matmul[K=256,M=256,N=256,dtype_bytes=4]"
+        assert "knobs" not in sp.signature()
+        assert "target_kind" not in sp.signature()
+
+
+class TestSignatureValueGrammar:
+    def test_bool_attrs_serialize_and_sort(self):
+        gqa = op_registry.make_space(
+            "flash_gqa", {"s": 512, "d": 64, "hq": 8, "hkv": 2}, "tpu")
+        assert gqa.signature() == (
+            "flash_gqa[causal=True,d=64,dtype_bytes=2,hkv=2,hq=8,s=512]")
+        off = op_registry.make_space(
+            "flash_gqa",
+            {"s": 512, "d": 64, "hq": 8, "hkv": 2, "causal": False}, "tpu")
+        assert "causal=False" in off.signature()
+
+    def test_parse_signature_value_types(self):
+        name, attrs = parse_signature(
+            "flash_gqa[causal=True,d=64,dtype_bytes=2,hkv=2,hq=8,s=512]")
+        assert name == "flash_gqa"
+        assert attrs["causal"] is True  # bool, not int, not the str "True"
+        assert attrs["d"] == 64 and isinstance(attrs["d"], int)
+
+    def test_signature_roundtrip_preserves_bools(self):
+        sp = op_registry.make_space(
+            "flash_gqa",
+            {"s": 256, "d": 64, "hq": 4, "hkv": 4, "causal": False}, "tpu")
+        back = op_registry.space_from_signature(sp.signature(), "tpu")
+        assert back is not None
+        assert back.signature() == sp.signature()
+
+    def test_unknown_and_malformed_signatures_return_none(self):
+        assert op_registry.space_from_signature("cell[L=4]", "cpu") is None
+        assert op_registry.space_from_signature("not a sig", "cpu") is None
+        assert op_registry.space_from_signature("matmul[M=12", "cpu") is None
+
+
+class TestEnumerationTruncation:
+    def test_full_enumeration_not_truncated(self):
+        sp = MatmulSpace(256, 256, 256, target_kind="cpu")
+        cfgs = list(sp.enumerate(None))
+        assert len(cfgs) == sp.size()
+        assert sp.enumeration_truncated is False
+
+    def test_truncation_is_loud_and_size_exposed(self, capsys):
+        sp = MatmulSpace(1024, 1024, 1024, target_kind="cpu")
+        total = sp.size()
+        cfgs = list(sp.enumerate(limit=7))
+        err = capsys.readouterr().err
+        assert len(cfgs) == 7
+        assert sp.enumeration_truncated is True
+        assert sp.signature() in err
+        assert "truncated to 7" in err and str(total) in err
+
+    def test_limit_covering_space_is_silent(self, capsys):
+        sp = MatmulSpace(128, 128, 128, target_kind="tpu")
+        cfgs = list(sp.enumerate(limit=sp.size()))
+        assert len(cfgs) == sp.size()
+        assert sp.enumeration_truncated is False
+        assert capsys.readouterr().err == ""
+
+
+class TestRegistryProperties:
+    @pytest.mark.parametrize("family", sorted(DIVIDES))
+    def test_every_registered_family_has_property_coverage(self, family):
+        assert family in op_registry.families()
+
+    def test_divides_map_covers_registry(self):
+        # a new register() call must add a DIVIDES row here
+        assert set(op_registry.families()) == set(DIVIDES)
+
+    @pytest.mark.parametrize("family", sorted(DIVIDES))
+    @pytest.mark.parametrize("kind", ["tpu", "cpu", "gpu"])
+    def test_signature_and_knob_roundtrip(self, family, kind):
+        _, preset = _first_preset(family)
+        sp = op_registry.make_space(family, preset.attrs, kind)
+        back = op_registry.space_from_signature(sp.signature(), kind)
+        assert back is not None
+        assert back.signature() == sp.signature()
+        assert back.knobs == sp.knobs
+
+    @pytest.mark.parametrize("family", sorted(DIVIDES))
+    def test_enumerated_configs_divide_their_shapes(self, family):
+        _, preset = _first_preset(family)
+        sp = op_registry.make_space(family, preset.attrs, preset.kind)
+        attrs = sp.attr_values()
+        for cfg in sp.enumerate(256):
+            for knob, shape_attr in DIVIDES[family].items():
+                assert attrs[shape_attr] % cfg[knob] == 0, (
+                    f"{family}: {knob}={cfg[knob]} does not divide "
+                    f"{shape_attr}={attrs[shape_attr]}")
+
+    @pytest.mark.parametrize("family", sorted(DIVIDES))
+    @pytest.mark.parametrize("target_name", TARGETS)
+    def test_instantiate_yields_wellformed_program(self, family,
+                                                   target_name):
+        target = get_target(target_name)
+        _, preset = _first_preset(family)
+        sp = op_registry.make_space(family, preset.attrs, target.kind)
+        prog, meta = sp.instantiate(sp.default_config())
+        assert isinstance(prog, Program)
+        assert prog.roots
+
+        def walk(stmt):
+            if isinstance(stmt, Loop):
+                assert isinstance(stmt.extent, int) and stmt.extent >= 1
+                for s in stmt.body:
+                    walk(s)
+
+        for root in prog.roots:
+            walk(root)
+        score = cost_model.evaluate(prog, target, meta)
+        assert score > 0 and score < float("inf")
+
+
+class TestBundling:
+    def test_unknown_family_skips_with_reason(self):
+        with pytest.raises(BundleSkip, match="no Pallas kernel"):
+            op_registry.bundle_for("conv2d[foo=1]", {})
+
+    def test_malformed_signature_skips(self):
+        with pytest.raises(BundleSkip):
+            op_registry.bundle_for("???", {})
+
+    def test_flash_gqa_bundles_grouped_kv_shapes(self):
+        spec = op_registry.bundle_for(
+            "flash_gqa[causal=True,d=64,dtype_bytes=2,hkv=2,hq=8,s=512]",
+            {"block_q": 128, "block_k": 128})
+        assert spec.kernel == "flash"
+        shapes = [a[0] for a in spec.in_avals]
+        assert shapes == [(1, 8, 512, 64), (1, 2, 512, 64), (1, 2, 512, 64)]
+        assert spec.params["causal"] is True
+
+    def test_flash_gqa_ragged_groups_skip(self):
+        with pytest.raises(BundleSkip, match="multiple"):
+            op_registry.bundle_for(
+                "flash_gqa[causal=True,d=64,dtype_bytes=2,hkv=3,hq=8,s=512]",
+                {"block_q": 128, "block_k": 128})
+
+
+class TestSmokeTuneAllTargets:
+    @pytest.mark.parametrize("family", sorted(DIVIDES))
+    def test_family_tunes_on_all_three_targets(self, family, tmp_path):
+        """One preset per family, tuned (tiny ES budget) on cpu/tpu/gpu —
+        a record must land in the DB under the registry signature."""
+        db = ScheduleDatabase(tmp_path / "db.jsonl")
+        _, preset = _first_preset(family)
+        for target_name in TARGETS:
+            target = get_target(target_name)
+            sp = op_registry.make_space(family, preset.attrs, target.kind)
+            res = tuner.tune(sp, target, iterations=2, population=4,
+                             workers=1, db=db)
+            assert res.score > 0 and res.score < float("inf")
+            rec = db.best(sp.signature(), target.name)
+            assert rec is not None
+            assert rec.config == res.config
+
+
+class TestLearnedFeatureLayout:
+    def test_knob_union_keeps_legacy_prefix(self):
+        """The learned ranker's knob feature columns must keep the
+        pre-registry layout as a prefix so old artifacts stay alignable."""
+        names = [kf.name for kf in op_registry.knob_feature_union()]
+        legacy = ["bm", "bn", "bk", "b_oc", "b_ow", "b_ic", "b_c"]
+        assert names[:len(legacy)] == legacy
